@@ -1,0 +1,35 @@
+"""Paper §5.1.4: bank-level parallelism — throughput scales linearly at
+constant energy/op (8 banks/rank × 2 ranks × 2 channels = 32 banks)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pim
+
+from .common import timed
+
+PAPER = {1: 4.82, 8: 38.56, 32: 154.24}   # MOps/s
+
+
+def run(report=print):
+    rng = np.random.default_rng(0)
+    rows_out = []
+    report(f"{'banks':>6} {'MOps/s':>9} {'paper':>9} {'nJ/op':>8}")
+    n_shifts = 64
+    for banks in (1, 8, 32):
+        data = jnp.asarray(rng.integers(0, 2**32, (banks, 2048),
+                                        dtype=np.uint32))
+        fn = pim.bank_parallel(
+            lambda r: pim.run_shift_workload(r, n_shifts), banks)
+        (states, wall_ns, energy), us = timed(fn, data)
+        mops = banks * n_shifts / float(wall_ns) * 1e3
+        nj_per_op = float(energy) / (banks * n_shifts)
+        paper = PAPER[banks]
+        report(f"{banks:6d} {mops:9.2f} {paper:9.2f} {nj_per_op:8.2f}")
+        rows_out.append((f"bank_parallel_{banks}", us,
+                         f"mops={mops:.2f};paper={paper};"
+                         f"nj_per_op={nj_per_op:.2f}"))
+    return rows_out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,22 @@
+"""Benchmark plumbing: wall-clock helper + row collection."""
+import time
+
+import jax
+
+
+def timed(fn, *args, warmup=1, iters=3, **kw):
+    """Returns (result, us_per_call)."""
+    result = None
+    for _ in range(warmup):
+        result = fn(*args, **kw)
+    jax.block_until_ready(result) if result is not None else None
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        result = fn(*args, **kw)
+    if result is not None:
+        jax.block_until_ready(result)
+    return result, (time.perf_counter() - t0) / iters * 1e6
+
+
+def pct_err(model, paper):
+    return 100.0 * (model / paper - 1.0)

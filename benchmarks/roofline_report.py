@@ -1,0 +1,49 @@
+"""Render the §Roofline table from the dry-run JSON records."""
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(tag=""):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if (r.get("tag", "") or "") == tag:
+            recs.append(r)
+    return recs
+
+
+def run(report=print):
+    recs = load_records()
+    rows_out = []
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    errored = [r for r in recs if r.get("status") == "error"]
+    report(f"dry-run cells: {len(ok)} ok, {len(skipped)} skipped, "
+           f"{len(errored)} error")
+    report(f"{'arch':22s} {'shape':12s} {'mesh':6s} {'t_comp':>9} "
+           f"{'t_mem':>9} {'t_coll':>9} {'bound':>10} {'frac':>6} "
+           f"{'util':>6}")
+    for r in ok:
+        report(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+               f"{r['t_compute']:9.4f} {r['t_memory']:9.4f} "
+               f"{r['t_collective']:9.4f} {r['bottleneck']:>10} "
+               f"{r.get('roofline_fraction_cell', 0):6.3f} "
+               f"{min(r.get('flops_utilization', 0), 9.99):6.3f}")
+        rows_out.append((
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            r.get("compile_s", 0) * 1e6,
+            f"bottleneck={r['bottleneck']};frac="
+            f"{r.get('roofline_fraction_cell', 0):.3f}"))
+    for r in skipped:
+        report(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+               f"{'skipped: ' + r['reason'][:40]:>46}")
+    return rows_out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Run every benchmark (one per paper table + extensions).
+
+Prints a ``name,us_per_call,derived`` CSV at the end.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bank_parallel, crypto_casestudy, kernel_bench,
+                   roofline_report, table2_energy, table3_perf,
+                   table4_variation, table5_area)
+    suites = [
+        ("table2_energy (paper Table 2)", table2_energy),
+        ("table3_perf (paper Table 3)", table3_perf),
+        ("table4_variation (paper Table 4)", table4_variation),
+        ("table5_area (paper Table 5 + \u00a76)", table5_area),
+        ("bank_parallel (paper \u00a75.1.4)", bank_parallel),
+        ("crypto_casestudy (paper \u00a78)", crypto_casestudy),
+        ("kernel_bench (Pallas kernels)", kernel_bench),
+        ("roofline_report (\u00a7Roofline)", roofline_report),
+    ]
+    rows = []
+    failed = []
+    for title, mod in suites:
+        print(f"\n=== {title} " + "=" * max(0, 60 - len(title)))
+        try:
+            rows.extend(mod.run())
+        except Exception as e:                        # noqa: BLE001
+            failed.append((title, e))
+            traceback.print_exc()
+    print("\n=== CSV " + "=" * 60)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if failed:
+        print(f"\n{len(failed)} suite(s) FAILED: "
+              f"{[t for t, _ in failed]}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Table 2: energy breakdown of shift workloads (1/50/100/512 shifts).
+
+Reproduces the NVMain experiment on the JAX PIM runtime and reports
+model-vs-paper errors per cell.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pim
+
+from .common import timed, pct_err
+
+PAPER = {  # n: (total_nj, active_nj, refresh_nj, energy_per_shift_nj)
+    1: (31.321, 30.24, 0.0, 31.321),
+    50: (1592.52, 1515.4, 77.1171, 31.85),
+    100: (3223.6, 3030.81, 192.793, 32.236),
+    512: (16554.6, 15513.5, 1041.08, 32.333),
+}
+
+
+def run(report=print):
+    rng = np.random.default_rng(0)
+    row = jnp.asarray(rng.integers(0, 2**32, (2048,), dtype=np.uint32))
+    rows = []
+    report(f"{'n_shifts':>9} {'total nJ':>12} {'paper':>10} {'err%':>7} "
+           f"{'active nJ':>10} {'refresh nJ':>10} {'nJ/shift':>9} "
+           f"{'nJ/KB':>7}")
+    for n, (e_tot, e_act, e_ref, e_per) in PAPER.items():
+        state, us = timed(pim.run_shift_workload, row, n)
+        m = state.meter
+        tot = float(m.total_energy_nj)
+        report(f"{n:9d} {tot:12.2f} {e_tot:10.2f} {pct_err(tot, e_tot):+7.2f}"
+               f" {float(m.e_act):10.2f} {float(m.e_refresh):10.2f}"
+               f" {tot/n:9.3f} {tot/n/8:7.3f}")
+        rows.append((f"table2_energy_n{n}", us,
+                     f"total_nJ={tot:.2f};paper={e_tot};err_pct="
+                     f"{pct_err(tot, e_tot):.2f}"))
+        assert float(m.e_burst) == 0.0, "PIM workload must not burst"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

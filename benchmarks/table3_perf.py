@@ -1,0 +1,36 @@
+"""Paper Table 3: latency / throughput of in-DRAM shift workloads."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pim
+
+from .common import timed, pct_err
+
+PAPER = {  # n: (total_time, per_shift_ns, mops)
+    1: (208.7, 208.7, None),
+    50: (10_291.0, 205.8, 4.86),
+    100: (20_733.0, 207.3, 4.82),
+    512: (106_272.0, 207.6, 4.82),
+}
+
+
+def run(report=print):
+    rng = np.random.default_rng(0)
+    row = jnp.asarray(rng.integers(0, 2**32, (2048,), dtype=np.uint32))
+    rows = []
+    report(f"{'n_shifts':>9} {'total ns':>12} {'paper':>10} {'err%':>7} "
+           f"{'ns/shift':>9} {'MOps/s':>8}")
+    for n, (t_paper, per_paper, mops_paper) in PAPER.items():
+        state, us = timed(pim.run_shift_workload, row, n)
+        t = float(state.meter.time_ns)
+        mops = n / t * 1e3
+        report(f"{n:9d} {t:12.1f} {t_paper:10.1f} {pct_err(t, t_paper):+7.2f}"
+               f" {t/n:9.2f} {mops:8.3f}")
+        rows.append((f"table3_perf_n{n}", us,
+                     f"total_ns={t:.1f};paper={t_paper};err_pct="
+                     f"{pct_err(t, t_paper):.2f};mops={mops:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

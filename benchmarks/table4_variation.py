@@ -1,0 +1,24 @@
+"""Paper Table 4: shift failure rate under process variation (Monte Carlo)."""
+import jax
+
+from repro.core.pim import variation as V
+
+from .common import timed
+
+
+def run(report=print):
+    key = jax.random.PRNGKey(42)
+    rows = []
+    report(f"{'variation':>10} {'model %':>9} {'paper %':>9}")
+    for p, paper in V.PAPER_TABLE4.items():
+        rate, us = timed(lambda pp=p: V.shift_failure_rate(
+            key, pp, n_trials=100_000))
+        r = float(rate)
+        report(f"{p:9.0f}% {100*r:9.2f} {100*paper:9.2f}")
+        rows.append((f"table4_variation_{int(p)}pct", us,
+                     f"model={100*r:.2f}%;paper={100*paper:.2f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

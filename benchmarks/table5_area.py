@@ -1,0 +1,32 @@
+"""Paper Table 5 + §6: area overhead model and MIM capacitor sizing."""
+from repro.core.pim.area import AreaModel, PAPER_TABLE5, \
+    mim_capacitor_plate_side_um
+
+from .common import timed
+
+
+def run(report=print):
+    model = AreaModel()
+    rows = []
+    _, us = timed(lambda: model.overhead_pct, iters=10)
+    report(f"migration-cell design overhead: {model.overhead_pct:.2f}% "
+           f"(paper: <1%); with Ambit: {model.overhead_with_ambit_pct:.2f}% "
+           f"(paper: ~1-2%)")
+    report(f"{'design':22s} {'added circuitry':38s} {'overhead'}")
+    for name, circuitry, overhead in PAPER_TABLE5:
+        report(f"{name:22s} {circuitry:38s} {overhead}")
+    side = mim_capacitor_plate_side_um()
+    report(f"MIM capacitor plate side (25fF, HfO2 eps_r=20, d=8nm): "
+           f"{side:.2f} um (paper: 1.06 um)")
+    assert model.overhead_pct < 1.0
+    assert model.overhead_with_ambit_pct < 2.0
+    assert abs(side - 1.06) < 0.05
+    rows.append(("table5_area_overhead", us,
+                 f"overhead_pct={model.overhead_pct:.2f};"
+                 f"with_ambit={model.overhead_with_ambit_pct:.2f};"
+                 f"mim_side_um={side:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

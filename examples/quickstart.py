@@ -1,0 +1,65 @@
+"""Quickstart: the paper's in-DRAM shift on the JAX PIM runtime.
+
+Shifts an 8KB row by one bit via the two migration-cell rows (4 AAP
+commands), validates the result, and prints the DDR3-1333 timing/energy next
+to the paper's NVMain numbers (Tables 2-3).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pim
+
+
+def main():
+    rng = np.random.default_rng(0)
+    row = jnp.asarray(rng.integers(0, 2**32, (2048,), dtype=np.uint32))
+
+    print("=== one full-row 1-bit right shift (4 AAPs, Fig. 3) ===")
+    state = pim.reserve_control_rows(pim.make_subarray())
+    state = pim.write_row(state, 0, row)
+    e0, t0 = float(state.meter.total_energy_nj), float(state.meter.time_ns)
+    state = pim.issue(state)
+    state = pim.shift(state, src=0, dst=1, delta=+1)
+
+    got = np.asarray(state.bits[1])
+    expect = np.asarray(pim.shift_row_words(row, +1))
+    assert np.array_equal(got, expect), "shift result mismatch!"
+    print(f"shifted 65,536 bits: OK   "
+          f"(mig_top captured even columns: "
+          f"{bool((state.mig_top & pim.ODD_MASK).max() == 0)})")
+    print(f"AAP commands: {int(state.meter.n_aap)}  "
+          f"ACTIVATEs: {int(state.meter.n_act)}")
+    print(f"latency : {float(state.meter.time_ns)-t0:8.1f} ns   "
+          f"(paper: 208.7 ns)")
+    print(f"energy  : {float(state.meter.total_energy_nj)-e0:8.2f} nJ   "
+          f"(paper: 31.32 nJ)")
+
+    print("\n=== Ambit + shift = functionally complete PIM ===")
+    a = jnp.asarray(rng.integers(0, 2**32, (2048,), dtype=np.uint32))
+    b = jnp.asarray(rng.integers(0, 2**32, (2048,), dtype=np.uint32))
+    s = pim.write_row(pim.write_row(state, 2, a), 3, b)
+    s = pim.ambit_and(s, 2, 3, 4)
+    s = pim.ambit_xor(s, 2, 3, 5)
+    s = pim.shift(s, 5, 6, +1)
+    assert np.array_equal(np.asarray(s.bits[4]), np.asarray(a & b))
+    assert np.array_equal(np.asarray(s.bits[6]),
+                          np.asarray(pim.shift_row_words(a ^ b, 1)))
+    print("AND, XOR, then shift the XOR row: OK")
+
+    print("\n=== the paper's Table 2/3 workloads ===")
+    for n in (1, 50, 100, 512):
+        st = pim.run_shift_workload(row, n)
+        print(f"{n:4d} shifts: {float(st.meter.time_ns):10.1f} ns  "
+              f"{float(st.meter.total_energy_nj):9.2f} nJ  "
+              f"({float(st.meter.total_energy_nj)/n/8:4.2f} nJ/KB)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Serve a small model with batched requests: prefill + jitted decode loop,
+PIM-quantized (pim_w4) variant included.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve.engine import greedy_generate
+
+
+def main():
+    cfg = get_config("qwen3-4b")
+    cfg = dataclasses.replace(
+        cfg, n_layers=4, d_model=256, n_heads=8, n_kv_heads=4, head_dim=32,
+        d_ff=768, vocab_size=8_000, tie_embeddings=True, dtype="float32",
+        remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, S, NEW = 4, 32, 24
+    prompts = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+
+    t0 = time.perf_counter()
+    out = greedy_generate(cfg, params, prompts, max_new_tokens=NEW)
+    dt = time.perf_counter() - t0
+    print(f"batched greedy decode: batch={B} prompt={S} new={NEW}")
+    print(f"tokens/s (incl. compile): {B*NEW/dt:.1f}")
+    for i in range(B):
+        print(f"  req{i}: {np.asarray(out[i])[:12]} ...")
+
+    t0 = time.perf_counter()
+    out2 = greedy_generate(cfg, params, prompts, max_new_tokens=NEW)
+    print(f"tokens/s (warm): {B*NEW/(time.perf_counter()-t0):.1f}")
+    assert jnp.array_equal(out, out2), "greedy decode must be deterministic"
+
+    # The paper's technique in serving: bit-plane quantized linears.
+    cfg_q = dataclasses.replace(cfg, quant="pim_w4", quant_mode="shift_add")
+    params_q = init_params(cfg_q, jax.random.PRNGKey(0))
+    out_q = greedy_generate(cfg_q, params_q, prompts, max_new_tokens=8)
+    print(f"pim_w4 (shift-and-add bit planes) decode: {out_q.shape} OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Core: the paper's contribution — PIM shift runtime + bit-plane compute."""

@@ -1,0 +1,5 @@
+"""Bit-parallel SIMD compute on horizontal data: the paper's app layer."""
+from .vm import PimVM
+from . import arith, gf, layout, rs
+
+__all__ = ["PimVM", "arith", "gf", "layout", "rs"]

@@ -1,0 +1,72 @@
+"""Horizontal element layout for PIM bit-parallel arithmetic.
+
+The paper's whole point: operands stay in the conventional *horizontal*
+layout — a w-bit element occupies w consecutive bitlines. Element ``e`` of a
+row lives at columns ``[e*w, (e+1)*w)``; column ``c`` is bit ``c % 32`` of
+packed word ``c // 32`` (little-endian, matching ``pim.state``).
+
+Masks (element-boundary control rows) are host-written once per width and
+reused — their setup cost is charged through ``write_row`` like any data.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pack_elements(values: np.ndarray, width: int, words: int) -> jnp.ndarray:
+    """Pack integer elements (< 2**width) into a (words,) uint32 row."""
+    values = np.asarray(values, dtype=np.uint64)
+    n = values.shape[0]
+    assert n * width <= words * 32, "row overflow"
+    bits = np.zeros(words * 32, dtype=np.uint8)
+    for e in range(n):
+        for j in range(width):
+            bits[e * width + j] = (values[e] >> j) & 1
+    out = np.zeros(words, dtype=np.uint32)
+    for c in np.nonzero(bits)[0]:
+        out[c // 32] |= np.uint32(1) << np.uint32(c % 32)
+    return jnp.asarray(out)
+
+
+def unpack_elements(row, width: int, count: int) -> np.ndarray:
+    """Inverse of ``pack_elements``."""
+    row = np.asarray(row, dtype=np.uint32)
+    full = 0
+    for i, w in enumerate(row):
+        full |= int(w) << (32 * i)
+    mask = (1 << width) - 1
+    return np.array([(full >> (e * width)) & mask for e in range(count)],
+                    dtype=np.uint64)
+
+
+def _pattern_row(width: int, words: int, element_pattern: int) -> jnp.ndarray:
+    """Tile a w-bit pattern across every element of the row."""
+    n = (words * 32) // width
+    vals = np.full(n, element_pattern, dtype=np.uint64)
+    return pack_elements(vals, width, words)
+
+
+def lsb_mask(width: int, words: int) -> jnp.ndarray:
+    """Bit 0 of every element set."""
+    return _pattern_row(width, words, 0b1)
+
+
+def msb_mask(width: int, words: int) -> jnp.ndarray:
+    """Bit w-1 of every element set."""
+    return _pattern_row(width, words, 1 << (width - 1))
+
+
+def interior_mask(width: int, words: int) -> jnp.ndarray:
+    """All bits except bit 0 of each element (where shifted-in carries from a
+    neighboring element would land after a +1 column shift)."""
+    return _pattern_row(width, words, ((1 << width) - 1) & ~1)
+
+
+def full_mask(width: int, words: int) -> jnp.ndarray:
+    return _pattern_row(width, words, (1 << width) - 1)
+
+
+def const_row(width: int, words: int, value: int) -> jnp.ndarray:
+    """Every element = value (e.g. the GF(2^8) reduction pattern 0x1B)."""
+    return _pattern_row(width, words, value)

@@ -1,0 +1,162 @@
+"""A row-register virtual machine over one PIM subarray.
+
+Thin convenience layer: registers are row indices, every method is one or a
+few ISA commands, and the DDR3 cost meter advances underneath. Programs are
+built eagerly in Python (this is the *programming model* layer; the Pallas
+``kernels/rowops`` path is the performance path for bulk execution).
+
+Element width ``w`` fixes the horizontal layout; mask/constant rows are
+host-written once per pattern and cached (setup cost is charged via
+``write_row`` like any other host traffic, and reported separately by
+``setup_energy_nj``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..pim import isa
+from ..pim.state import SubarrayState, make_subarray
+from ..pim.timing import DDR3Timing, DEFAULT_TIMING
+from . import layout
+
+
+class PimVM:
+    RESERVED_TAIL = 8  # C0/C1/T0..T3 + margin
+
+    def __init__(self, width: int, num_rows: int = 128, words: int = 16,
+                 cfg: DDR3Timing = DEFAULT_TIMING):
+        assert (words * 32) % width == 0
+        self.width = width
+        self.words = words
+        self.cfg = cfg
+        self.lanes = (words * 32) // width
+        st = make_subarray(num_rows, words)
+        self.state: SubarrayState = isa.reserve_control_rows(st)
+        self._free = list(range(num_rows - self.RESERVED_TAIL - 1, -1, -1))
+        self._mask_rows: dict[int, int] = {}
+        self._setup_energy_marker = 0.0
+
+    # -- register management -------------------------------------------------
+    def alloc(self) -> int:
+        return self._free.pop()
+
+    def free(self, *regs: int) -> None:
+        self._free.extend(regs)
+
+    # -- host I/O -------------------------------------------------------------
+    def load(self, values, reg: int | None = None) -> int:
+        reg = self.alloc() if reg is None else reg
+        row = layout.pack_elements(np.asarray(values), self.width, self.words)
+        self.state = isa.write_row(self.state, reg, row, self.cfg)
+        return reg
+
+    def read(self, reg: int) -> np.ndarray:
+        self.state, row = isa.read_row(self.state, reg, self.cfg)
+        return layout.unpack_elements(row, self.width, self.lanes)
+
+    def mask(self, element_pattern: int) -> int:
+        """Row with ``element_pattern`` tiled into every element (cached)."""
+        if element_pattern not in self._mask_rows:
+            reg = self.alloc()
+            row = layout.const_row(self.width, self.words, element_pattern)
+            self.state = isa.write_row(self.state, reg, row, self.cfg)
+            self._mask_rows[element_pattern] = reg
+        return self._mask_rows[element_pattern]
+
+    # -- ISA ops (dst allocated when omitted; returns dst) --------------------
+    def copy(self, a: int, dst: int | None = None) -> int:
+        dst = self.alloc() if dst is None else dst
+        self.state = isa.rowclone(self.state, a, dst, self.cfg)
+        return dst
+
+    def and_(self, a: int, b: int, dst: int | None = None) -> int:
+        dst = self.alloc() if dst is None else dst
+        self.state = isa.ambit_and(self.state, a, b, dst, self.cfg)
+        return dst
+
+    def or_(self, a: int, b: int, dst: int | None = None) -> int:
+        dst = self.alloc() if dst is None else dst
+        self.state = isa.ambit_or(self.state, a, b, dst, self.cfg)
+        return dst
+
+    def xor(self, a: int, b: int, dst: int | None = None) -> int:
+        dst = self.alloc() if dst is None else dst
+        self.state = isa.ambit_xor(self.state, a, b, dst, self.cfg)
+        return dst
+
+    def not_(self, a: int, dst: int | None = None) -> int:
+        dst = self.alloc() if dst is None else dst
+        self.state = isa.ambit_not(self.state, a, dst, self.cfg)
+        return dst
+
+    def maj(self, a: int, b: int, c: int, dst: int | None = None) -> int:
+        dst = self.alloc() if dst is None else dst
+        self.state = isa.ambit_maj(self.state, a, b, c, dst, self.cfg)
+        return dst
+
+    def zero(self, dst: int | None = None) -> int:
+        dst = self.alloc() if dst is None else dst
+        self.state = isa.rowclone(self.state, isa.C0, dst, self.cfg)
+        return dst
+
+    def shift_cols(self, a: int, k: int, dst: int | None = None) -> int:
+        """Shift |k| columns via |k| migration-cell shifts (no masking)."""
+        dst = self.alloc() if dst is None else dst
+        if k == 0:
+            self.state = isa.rowclone(self.state, a, dst, self.cfg)
+            return dst
+        delta = 1 if k > 0 else -1
+        self.state = isa.shift(self.state, a, dst, delta, self.cfg)
+        for _ in range(abs(k) - 1):
+            self.state = isa.shift(self.state, dst, dst, delta, self.cfg)
+        return dst
+
+    def shift_elem(self, a: int, k: int, dst: int | None = None) -> int:
+        """Element-local shift: column shift + boundary mask (crossing bits
+        dropped). k > 0 shifts toward the element MSB (i.e. ``x << k``)."""
+        dst = self.shift_cols(a, k, dst)
+        if k == 0:
+            return dst
+        w = self.width
+        if k > 0:
+            pattern = ((1 << w) - 1) & ~((1 << min(k, w)) - 1)
+        else:
+            pattern = ((1 << w) - 1) >> min(-k, w)
+        return self.and_(dst, self.mask(pattern), dst)
+
+    # -- derived --------------------------------------------------------------
+    def smear(self, a: int, dst: int | None = None) -> int:
+        """OR-spread any set bit of each element across the whole element
+        (log2(w) doubling rounds in each direction)."""
+        dst = self.copy(a, dst)
+        s = 1
+        while s < self.width:
+            up = self.shift_elem(dst, +s)
+            self.or_(dst, up, dst)
+            self.free(up)
+            s *= 2
+        s = 1
+        while s < self.width:
+            dn = self.shift_elem(dst, -s)
+            self.or_(dst, dn, dst)
+            self.free(dn)
+            s *= 2
+        return dst
+
+    # -- accounting -----------------------------------------------------------
+    @property
+    def time_ns(self) -> float:
+        return float(self.state.meter.time_ns)
+
+    @property
+    def energy_nj(self) -> float:
+        return float(self.state.meter.total_energy_nj)
+
+    @property
+    def setup_energy_nj(self) -> float:
+        return float(self.state.meter.e_burst)
+
+    def counts(self) -> dict:
+        m = self.state.meter
+        return {k: int(getattr(m, k)) for k in
+                ("n_act", "n_pre", "n_aap", "n_shift", "n_tra")}

@@ -1,0 +1,27 @@
+"""In-DRAM PIM runtime: the paper's migration-cell shift + Ambit ISA in JAX."""
+from .state import (CostMeter, SubarrayState, make_bank, make_subarray,
+                    EVEN_MASK, ODD_MASK, NUM_ROWS, ROW_BITS, ROW_WORDS,
+                    WORD_BITS)
+from .timing import (DDR3Timing, DEFAULT_TIMING, apply_refresh,
+                     cpu_movement_energy_nj)
+from .isa import (C0, C1, T0, T1, T2, T3, ambit_and, ambit_maj, ambit_not,
+                  ambit_or, ambit_xor, dcc_to, dra, issue, maj3_words,
+                  not_to_dcc, read_row, reserve_control_rows, rowclone, shift,
+                  shift_row_words, tra, write_row)
+from .program import (bank_parallel, estimate_cost, run_shift_workload,
+                      shift_k)
+from .variation import (PAPER_TABLE4, TECH22, Tech22nm, shift_failure_rate)
+from .area import AreaModel, PAPER_TABLE5, mim_capacitor_plate_side_um
+
+__all__ = [
+    "CostMeter", "SubarrayState", "make_bank", "make_subarray",
+    "EVEN_MASK", "ODD_MASK", "NUM_ROWS", "ROW_BITS", "ROW_WORDS", "WORD_BITS",
+    "DDR3Timing", "DEFAULT_TIMING", "apply_refresh", "cpu_movement_energy_nj",
+    "C0", "C1", "T0", "T1", "T2", "T3", "ambit_and", "ambit_maj", "ambit_not",
+    "ambit_or", "ambit_xor", "dcc_to", "dra", "issue", "maj3_words",
+    "not_to_dcc", "read_row", "reserve_control_rows", "rowclone", "shift",
+    "shift_row_words", "tra", "write_row",
+    "bank_parallel", "estimate_cost", "run_shift_workload", "shift_k",
+    "PAPER_TABLE4", "TECH22", "Tech22nm", "shift_failure_rate",
+    "AreaModel", "PAPER_TABLE5", "mim_capacitor_plate_side_um",
+]

@@ -1,0 +1,254 @@
+"""The in-DRAM PIM command ISA.
+
+Primitive commands (each advances the DDR3 cost meter):
+
+    rowclone(src, dst)            AAP — intra-subarray copy (RowClone-FPM)
+    tra(r1, r2, r3)               triple-row activation → MAJ3, destructive
+    dra(src, dst)                 dual-row activation (RowClone variant)
+    not_to_dcc(src) / dcc_to(dst) Ambit NOT via the dual-contact-cell row
+    shift(src, dst, delta=±1)     THE PAPER'S PRIMITIVE — 4 AAPs through the
+                                  two migration rows
+    write_row / read_row          host <-> row buffer (burst energy)
+
+Composite Ambit ops built from primitives (costs emerge from the sequence):
+
+    ambit_and / ambit_or / ambit_maj / ambit_xor / ambit_not
+
+Row index arguments may be Python ints or traced int32 scalars; all commands
+are functional (state in, state out) and jit/vmap/shard-compatible.
+
+Row-address map (matching the paper's Figure 1): data rows 0..R-1 are
+``state.bits``; the migration rows and the DCC row are held out-of-band in
+dedicated fields. Two reserved data rows serve as Ambit control rows:
+row R-1 = C0 (all zeros), row R-2 = C1 (all ones); ``reserve_control_rows``
+initializes them. Rows R-3, R-4, R-5 are the Ambit scratch (T0, T1, T2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .state import EVEN_MASK, ODD_MASK, SubarrayState
+from .timing import (DDR3Timing, DEFAULT_TIMING, charge_aap, charge_burst,
+                     charge_issue, charge_mra, charge_shift)
+
+# Reserved row aliases (relative to num_rows R).
+C0 = -1   # constant zeros
+C1 = -2   # constant ones
+T0 = -3   # scratch
+T1 = -4
+T2 = -5
+T3 = -6   # extra scratch (survives ambit_maj, which clobbers T0..T2)
+
+
+def resolve(state: SubarrayState, r) -> jax.Array:
+    """Resolve possibly-negative row aliases to absolute indices."""
+    return jnp.asarray(r) % state.num_rows
+
+
+def reserve_control_rows(state: SubarrayState) -> SubarrayState:
+    bits = state.bits
+    bits = bits.at[-1].set(jnp.zeros((state.words,), jnp.uint32))
+    bits = bits.at[-2].set(jnp.full((state.words,), 0xFFFF_FFFF, jnp.uint32))
+    return SubarrayState(bits=bits, mig_top=state.mig_top,
+                         mig_bot=state.mig_bot, dcc=state.dcc,
+                         meter=state.meter)
+
+
+# ---------------------------------------------------------------------------
+# Row-level helpers (pure bit math on packed uint32 rows)
+# ---------------------------------------------------------------------------
+
+def shift_row_words(row: jax.Array, delta: int) -> jax.Array:
+    """Shift a packed row by ``delta`` columns (+1 = toward higher column).
+
+    Little-endian bit order: +1 column == left shift within each word with the
+    carry bit (bit 31) propagated into bit 0 of the *next* word. Edge bits
+    fall off (the last migration cell has no partner bitline — fill 0).
+    """
+    row = row.astype(jnp.uint32)
+    if delta == 0:
+        return row
+    k = abs(int(delta))
+    kw, kb = divmod(k, 32)
+
+    def word_shift(x, up):  # shift whole words along the row axis, 0 fill
+        if up == 0:
+            return x
+        pad = jnp.zeros(x.shape[:-1] + (abs(up),), jnp.uint32)
+        if up > 0:
+            return jnp.concatenate([pad, x[..., :-up]], axis=-1)
+        return jnp.concatenate([x[..., -up:], pad], axis=-1)
+
+    if delta > 0:
+        x = word_shift(row, kw)
+        if kb:
+            carry = word_shift(x, 1) >> jnp.uint32(32 - kb)
+            x = (x << jnp.uint32(kb)) | carry
+        return x
+    x = word_shift(row, -kw)
+    if kb:
+        carry = word_shift(x, -1) << jnp.uint32(32 - kb)
+        x = (x >> jnp.uint32(kb)) | carry
+    return x
+
+
+def maj3_words(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    return (a & b) | (b & c) | (a & c)
+
+
+# ---------------------------------------------------------------------------
+# Primitive commands
+# ---------------------------------------------------------------------------
+
+def _with(state: SubarrayState, *, bits=None, mig_top=None, mig_bot=None,
+          dcc=None, meter=None) -> SubarrayState:
+    return SubarrayState(
+        bits=state.bits if bits is None else bits,
+        mig_top=state.mig_top if mig_top is None else mig_top,
+        mig_bot=state.mig_bot if mig_bot is None else mig_bot,
+        dcc=state.dcc if dcc is None else dcc,
+        meter=state.meter if meter is None else meter,
+    )
+
+
+def rowclone(state: SubarrayState, src, dst,
+             cfg: DDR3Timing = DEFAULT_TIMING) -> SubarrayState:
+    """AAP: dst <- src (src restored by the sense amps)."""
+    src_i, dst_i = resolve(state, src), resolve(state, dst)
+    row = state.bits[src_i]
+    return _with(state, bits=state.bits.at[dst_i].set(row),
+                 meter=charge_aap(state.meter, cfg))
+
+
+def dra(state: SubarrayState, src, dst,
+        cfg: DDR3Timing = DEFAULT_TIMING) -> SubarrayState:
+    """Dual-row activation copy variant (both rows end equal to src)."""
+    src_i, dst_i = resolve(state, src), resolve(state, dst)
+    row = state.bits[src_i]
+    return _with(state, bits=state.bits.at[dst_i].set(row),
+                 meter=charge_mra(state.meter, 2, cfg))
+
+
+def tra(state: SubarrayState, r1, r2, r3,
+        cfg: DDR3Timing = DEFAULT_TIMING) -> SubarrayState:
+    """Triple-row activation: all three rows <- MAJ(r1, r2, r3). Destructive."""
+    i1, i2, i3 = (resolve(state, r) for r in (r1, r2, r3))
+    m = maj3_words(state.bits[i1], state.bits[i2], state.bits[i3])
+    bits = state.bits.at[i1].set(m).at[i2].set(m).at[i3].set(m)
+    return _with(state, bits=bits, meter=charge_mra(state.meter, 3, cfg))
+
+
+def not_to_dcc(state: SubarrayState, src,
+               cfg: DDR3Timing = DEFAULT_TIMING) -> SubarrayState:
+    """Ambit NOT, phase 1: dcc <- ~src (charge crosses the DCC's n-port)."""
+    row = state.bits[resolve(state, src)]
+    return _with(state, dcc=~row, meter=charge_aap(state.meter, cfg))
+
+
+def dcc_to(state: SubarrayState, dst,
+           cfg: DDR3Timing = DEFAULT_TIMING) -> SubarrayState:
+    """Ambit NOT, phase 2: dst <- dcc."""
+    dst_i = resolve(state, dst)
+    return _with(state, bits=state.bits.at[dst_i].set(state.dcc),
+                 meter=charge_aap(state.meter, cfg))
+
+
+def shift(state: SubarrayState, src, dst, delta: int = +1,
+          cfg: DDR3Timing = DEFAULT_TIMING) -> SubarrayState:
+    """THE PAPER'S PRIMITIVE: full-row 1-bit shift via the migration rows.
+
+    Right shift (delta=+1), mirroring Fig. 3's 4-AAP sequence:
+      AAP1  src -> mig_top  : top row captures the EVEN-column bits
+      AAP2  src -> mig_bot  : bottom row captures the ODD-column bits
+      AAP3  mig_top -> dst  : even bits re-emerge at their pair's odd bitline
+      AAP4  mig_bot -> dst  : odd bits re-emerge one pair over; rows merge
+
+    Left shift swaps which parity each migration row captures. Edge bits fall
+    off (fill 0). ``delta`` must be ±1 — multi-bit shifts are repeated ops
+    (paper §8.0.3); use ``program.shift_k`` for the loop.
+    """
+    assert delta in (+1, -1), "the migration-cell shift moves exactly 1 bit"
+    src_i, dst_i = resolve(state, src), resolve(state, dst)
+    row = state.bits[src_i]
+    if delta == +1:
+        mig_top = row & EVEN_MASK            # AAP1: capture even columns
+        mig_bot = row & ODD_MASK             # AAP2: capture odd columns
+    else:
+        mig_top = row & ODD_MASK             # AAP1: capture odd columns
+        mig_bot = row & EVEN_MASK            # AAP2: capture even columns
+    out_top = shift_row_words(mig_top, delta)  # AAP3: emerge via other port
+    out_bot = shift_row_words(mig_bot, delta)  # AAP4: emerge + merge
+    merged = out_top | out_bot
+    return _with(state, mig_top=mig_top, mig_bot=mig_bot,
+                 bits=state.bits.at[dst_i].set(merged),
+                 meter=charge_shift(state.meter, cfg))
+
+
+def write_row(state: SubarrayState, dst, row: jax.Array,
+              cfg: DDR3Timing = DEFAULT_TIMING) -> SubarrayState:
+    """Host write: burst data onto the chip then restore into the row."""
+    dst_i = resolve(state, dst)
+    meter = charge_burst(state.meter, state.words * 4, cfg)
+    return _with(state, bits=state.bits.at[dst_i].set(row.astype(jnp.uint32)),
+                 meter=meter)
+
+
+def read_row(state: SubarrayState, src,
+             cfg: DDR3Timing = DEFAULT_TIMING):
+    """Host read: returns (state', row) and charges burst energy."""
+    src_i = resolve(state, src)
+    meter = charge_burst(state.meter, state.words * 4, cfg)
+    return _with(state, meter=meter), state.bits[src_i]
+
+
+def issue(state: SubarrayState,
+          cfg: DDR3Timing = DEFAULT_TIMING) -> SubarrayState:
+    """Command-burst issue overhead (once per host-triggered burst)."""
+    return _with(state, meter=charge_issue(state.meter, cfg))
+
+
+# ---------------------------------------------------------------------------
+# Composite Ambit ops (costs emerge from the primitive sequence)
+# ---------------------------------------------------------------------------
+
+def ambit_maj(state: SubarrayState, a, b, c, dst,
+              cfg: DDR3Timing = DEFAULT_TIMING) -> SubarrayState:
+    """dst <- MAJ(a, b, c): 3 copies into scratch, TRA, copy out = 4 AAP + TRA."""
+    s = rowclone(state, a, T0, cfg)
+    s = rowclone(s, b, T1, cfg)
+    s = rowclone(s, c, T2, cfg)
+    s = tra(s, T0, T1, T2, cfg)
+    return rowclone(s, T0, dst, cfg)
+
+
+def ambit_and(state: SubarrayState, a, b, dst,
+              cfg: DDR3Timing = DEFAULT_TIMING) -> SubarrayState:
+    """dst <- a & b = MAJ(a, b, 0)."""
+    return ambit_maj(state, a, b, C0, dst, cfg)
+
+
+def ambit_or(state: SubarrayState, a, b, dst,
+             cfg: DDR3Timing = DEFAULT_TIMING) -> SubarrayState:
+    """dst <- a | b = MAJ(a, b, 1)."""
+    return ambit_maj(state, a, b, C1, dst, cfg)
+
+
+def ambit_not(state: SubarrayState, src, dst,
+              cfg: DDR3Timing = DEFAULT_TIMING) -> SubarrayState:
+    """dst <- ~src via the dual-contact-cell row (2 AAPs)."""
+    s = not_to_dcc(state, src, cfg)
+    return dcc_to(s, dst, cfg)
+
+
+def ambit_xor(state: SubarrayState, a, b, dst,
+              cfg: DDR3Timing = DEFAULT_TIMING) -> SubarrayState:
+    """dst <- a ^ b = (a | b) & ~(a & b). Uses T0/T1 as intermediates.
+
+    Note: XOR is the workhorse of GF(2) arithmetic (AES / Reed-Solomon), which
+    is why the paper pairs shifting with Ambit ops for crypto workloads.
+    """
+    s = ambit_or(state, a, b, T3, cfg)       # T3 = a | b (T0..T2 are scratch)
+    s = ambit_and(s, a, b, dst, cfg)         # dst = a & b
+    s = ambit_not(s, dst, dst, cfg)          # dst = ~(a & b)
+    return ambit_and(s, T3, dst, dst, cfg)   # dst = (a|b) & ~(a&b)

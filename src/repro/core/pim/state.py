@@ -1,0 +1,119 @@
+"""Subarray / bank state for the in-DRAM PIM runtime.
+
+The paper's subarray is modeled functionally:
+
+- ``bits``    : (num_rows, words) uint32 — the data rows. Column ``c`` of the
+  8KB row (65,536 bitlines) lives at bit ``c % 32`` (little-endian) of word
+  ``c // 32``. Horizontal layout is preserved — this is the paper's key
+  property (no transposition).
+- ``mig_top`` : (words,) uint32 — migration-cell row at the top of the
+  subarray. Each migration cell is shared between bitline pair ``(2k, 2k+1)``.
+- ``mig_bot`` : (words,) uint32 — migration-cell row at the bottom, staggered
+  pairing ``(2k+1, 2k+2)``.
+- ``dcc``     : (words,) uint32 — dual-contact-cell row (Ambit NOT).
+- ``meter``   : cost meter advanced by every command (DDR3-1333 model).
+
+Everything is a registered dataclass pytree so whole PIM programs jit, vmap
+(banks) and shard (channels/ranks) like any other JAX computation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# Paper/NVMain configuration: 8KB row buffer = 65,536 bitlines; 512 rows.
+ROW_BITS = 65_536
+WORD_BITS = 32
+ROW_WORDS = ROW_BITS // WORD_BITS  # 2048
+NUM_ROWS = 512
+
+# Parity masks in little-endian bit order: even columns sit at bits 0,2,4,...
+EVEN_MASK = jnp.uint32(0x5555_5555)
+ODD_MASK = jnp.uint32(0xAAAA_AAAA)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "time_ns", "e_act", "e_pre", "e_refresh", "e_burst", "e_background",
+        "n_act", "n_pre", "n_aap", "n_shift", "n_tra", "n_refresh",
+    ],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class CostMeter:
+    """DDR3-1333 time/energy accounting (ns / nJ), advanced per command."""
+
+    time_ns: jax.Array
+    e_act: jax.Array
+    e_pre: jax.Array
+    e_refresh: jax.Array
+    e_burst: jax.Array
+    e_background: jax.Array
+    n_act: jax.Array
+    n_pre: jax.Array
+    n_aap: jax.Array
+    n_shift: jax.Array
+    n_tra: jax.Array
+    n_refresh: jax.Array
+
+    @staticmethod
+    def zeros() -> "CostMeter":
+        z = jnp.zeros((), jnp.float32)
+        zi = jnp.zeros((), jnp.int32)
+        return CostMeter(
+            time_ns=z, e_act=z, e_pre=z, e_refresh=z, e_burst=z,
+            e_background=z, n_act=zi, n_pre=zi, n_aap=zi, n_shift=zi,
+            n_tra=zi, n_refresh=zi,
+        )
+
+    @property
+    def total_energy_nj(self) -> jax.Array:
+        return (self.e_act + self.e_pre + self.e_refresh + self.e_burst
+                + self.e_background)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["bits", "mig_top", "mig_bot", "dcc", "meter"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class SubarrayState:
+    """One open-bitline subarray with the paper's two migration rows."""
+
+    bits: jax.Array      # (num_rows, words) uint32
+    mig_top: jax.Array   # (words,) uint32
+    mig_bot: jax.Array   # (words,) uint32
+    dcc: jax.Array       # (words,) uint32
+    meter: CostMeter
+
+    @property
+    def num_rows(self) -> int:
+        return self.bits.shape[-2]
+
+    @property
+    def words(self) -> int:
+        return self.bits.shape[-1]
+
+
+def make_subarray(num_rows: int = NUM_ROWS, words: int = ROW_WORDS,
+                  bits: jax.Array | None = None) -> SubarrayState:
+    if bits is None:
+        bits = jnp.zeros((num_rows, words), jnp.uint32)
+    else:
+        bits = jnp.asarray(bits, jnp.uint32)
+        assert bits.shape == (num_rows, words), (bits.shape, num_rows, words)
+    zrow = jnp.zeros((words,), jnp.uint32)
+    return SubarrayState(bits=bits, mig_top=zrow, mig_bot=zrow, dcc=zrow,
+                         meter=CostMeter.zeros())
+
+
+def make_bank(num_subarrays: int, num_rows: int = NUM_ROWS,
+              words: int = ROW_WORDS) -> SubarrayState:
+    """A bank is a stacked (vmap-able) batch of subarrays."""
+    return jax.vmap(lambda _: make_subarray(num_rows, words))(
+        jnp.arange(num_subarrays))

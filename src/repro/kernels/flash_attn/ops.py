@@ -1,0 +1,27 @@
+"""Jit'd wrapper for the Pallas flash-attention forward kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import flash_attn as _k
+from . import ref as _ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, pos_q, pos_k, *, window=None, scale=None,
+                    bq: int = _k.DEFAULT_BQ, bk: int = _k.DEFAULT_BK,
+                    interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _k.flash_attention_fwd(q, k, v, pos_q, pos_k, window=window,
+                                  scale=scale, bq=bq, bk=bk,
+                                  interpret=interpret)
+
+
+ref_flash_attention = _ref.ref_flash_attention

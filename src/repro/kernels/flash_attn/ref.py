@@ -1,0 +1,28 @@
+"""Oracle for the Pallas flash-attention kernel: plain masked softmax."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_flash_attention(q, k, v, pos_q, pos_k, *, window=None, scale=None):
+    """q: (H, Sq, dh) query heads; k/v: (KV, Sk, dh); H = KV·G with head h
+    reading kv head h // G. pos_*: int32 positions (−1 = invalid key)."""
+    H, Sq, dh = q.shape
+    KV, Sk, _ = k.shape
+    G = H // KV
+    scale = (dh ** -0.5) if scale is None else scale
+    kk = jnp.repeat(k, G, axis=0)
+    vv = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    ok = (pos_k[None, None, :] >= 0) \
+        & (pos_k[None, None, :] <= pos_q[None, :, None])
+    if window is not None:
+        ok &= (pos_q[None, :, None] - pos_k[None, None, :]) < window
+    s = jnp.where(ok, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("hqk,hkd->hqd", p, vv.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,53 @@
+"""Public API: quantize + pim_matmul + a drop-in linear layer.
+
+`pim_linear` is how the paper's technique enters the LM stack: any linear in
+``repro.models`` can run as a bit-plane quantized matmul
+(config.quant = "pim_w4" / "pim_w8", mode = "shift_add" | "dequant").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import pim_matmul as _k
+from . import ref as _ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quantize(w, bits: int):
+    """Symmetric per-output-channel int quantization → (int8 codes, scales)."""
+    return _ref.ref_quantize(w, bits)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "bits", "bm", "bn", "bk",
+                                    "interpret"))
+def pim_matmul(x, w_int, scales, *, mode: str = "shift_add", bits: int = 4,
+               bm: int = 128, bn: int = 128, bk: int = 512,
+               interpret: bool | None = None):
+    """Y = X @ (W_int · scale) via bit planes. x: (M,K), w_int: (K,N) int8."""
+    interpret = _default_interpret() if interpret is None else interpret
+    raw = _k.pim_matmul_raw(x, w_int, mode=mode, bits=bits,
+                            bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return raw * scales[None, :].astype(jnp.float32)
+
+
+def pim_linear(x, w_int, scales, *, mode: str = "shift_add", bits: int = 4,
+               out_dtype=jnp.bfloat16, interpret: bool | None = None):
+    """Linear layer over arbitrary leading dims: (..., K) @ (K, N)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = pim_matmul(x2, w_int, scales, mode=mode, bits=bits,
+                   interpret=interpret)
+    return y.reshape(*lead, -1).astype(out_dtype)
+
+
+# Re-exported oracles.
+ref_pim_matmul = _ref.ref_pim_matmul
+ref_pim_matmul_planes = _ref.ref_pim_matmul_planes
+ref_quantize = _ref.ref_quantize

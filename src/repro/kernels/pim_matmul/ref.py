@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the bit-plane shift-and-add matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def plane_coeffs(bits: int):
+    """Two's-complement plane weights: [1, 2, ..., -(2^(bits-1))]."""
+    c = [float(1 << i) for i in range(bits - 1)]
+    c.append(-float(1 << (bits - 1)))
+    return c
+
+
+def ref_planes(w_int: jnp.ndarray, bits: int):
+    """Decompose signed int8 weights into 0/1 bit planes (list of arrays)."""
+    wu = w_int.astype(jnp.int32) & ((1 << bits) - 1)
+    return [((wu >> i) & 1).astype(jnp.float32) for i in range(bits)]
+
+
+def ref_dequant(w_int: jnp.ndarray, scales: jnp.ndarray,
+                bits: int) -> jnp.ndarray:
+    """Reference dequantize: w_int * scale (per output channel)."""
+    del bits
+    return w_int.astype(jnp.float32) * scales[None, :].astype(jnp.float32)
+
+
+def ref_pim_matmul(x: jnp.ndarray, w_int: jnp.ndarray, scales: jnp.ndarray,
+                   bits: int) -> jnp.ndarray:
+    """Y = X @ dequant(W). Mathematically identical for both kernel modes:
+    sum_b c_b (X @ plane_b) * scale == X @ (W_int * scale)."""
+    xf = x.astype(jnp.float32)
+    wf = ref_dequant(w_int, scales, bits)
+    return xf @ wf
+
+
+def ref_pim_matmul_planes(x: jnp.ndarray, w_int: jnp.ndarray,
+                          scales: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Plane-by-plane evaluation (tests the shift-add decomposition itself)."""
+    xf = x.astype(jnp.float32)
+    acc = jnp.zeros((x.shape[0], w_int.shape[1]), jnp.float32)
+    for coeff, plane in zip(plane_coeffs(bits), ref_planes(w_int, bits)):
+        acc = acc + coeff * (xf @ plane)
+    return acc * scales[None, :].astype(jnp.float32)
+
+
+def ref_quantize(w: jnp.ndarray, bits: int):
+    """Symmetric per-output-channel quantization to signed ``bits`` ints."""
+    qmax = float((1 << (bits - 1)) - 1)
+    absmax = jnp.max(jnp.abs(w), axis=0)
+    scales = jnp.maximum(absmax, 1e-8) / qmax
+    w_int = jnp.clip(jnp.round(w / scales[None, :]), -qmax - 1, qmax)
+    return w_int.astype(jnp.int8), scales.astype(jnp.float32)

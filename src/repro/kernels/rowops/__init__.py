@@ -1,0 +1,2 @@
+from .ops import bitwise, shift_cols, ripple_add
+from . import ref

@@ -1,0 +1,46 @@
+"""Jit'd public wrappers for the rowops kernels.
+
+``interpret`` defaults to True on CPU hosts (this container) and False when a
+real TPU backend is present; callers can force either.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import rowops as _k
+from . import ref as _ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def bitwise(a, b=None, c=None, *, op: str, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _k.bitwise(a.astype(jnp.uint32),
+                      None if b is None else b.astype(jnp.uint32),
+                      None if c is None else c.astype(jnp.uint32),
+                      op=op, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def shift_cols(x, k: int, *, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _k.shift_cols(x.astype(jnp.uint32), k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "interpret"))
+def ripple_add(a, b, *, width: int, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _k.ripple_add(a.astype(jnp.uint32), b.astype(jnp.uint32),
+                         width=width, interpret=interpret)
+
+
+# Re-exported oracles (benchmarks compare kernel vs ref on identical inputs).
+ref_bitwise = _ref.ref_bitwise
+ref_shift_cols = _ref.ref_shift_cols
+ref_ripple_add = _ref.ref_ripple_add

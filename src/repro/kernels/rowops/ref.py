@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for the rowops Pallas kernel.
+
+Rows are (N, W) uint32: N independent DRAM rows of W packed words; column c
+of a row = bit c%32 (little-endian) of word c//32 — same convention as
+``repro.core.pim.state``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_bitwise(a, b=None, c=None, *, op: str):
+    a = a.astype(jnp.uint32)
+    if op == "not":
+        return ~a
+    b = b.astype(jnp.uint32)
+    if op == "and":
+        return a & b
+    if op == "or":
+        return a | b
+    if op == "xor":
+        return a ^ b
+    if op == "maj":
+        c = c.astype(jnp.uint32)
+        return (a & b) | (b & c) | (a & c)
+    raise ValueError(op)
+
+
+def ref_shift_cols(x, k: int):
+    """Shift every row by k columns (+ = toward higher column), 0 fill."""
+    x = x.astype(jnp.uint32)
+    if k == 0:
+        return x
+    kw, kb = divmod(abs(int(k)), 32)
+
+    def word_shift(v, up):
+        if up == 0:
+            return v
+        pad = jnp.zeros(v.shape[:-1] + (abs(up),), jnp.uint32)
+        if up > 0:
+            return jnp.concatenate([pad, v[..., :-up]], axis=-1)
+        return jnp.concatenate([v[..., -up:], pad], axis=-1)
+
+    if k > 0:
+        v = word_shift(x, kw)
+        if kb:
+            v = (v << jnp.uint32(kb)) | (word_shift(v, 1) >> jnp.uint32(32 - kb))
+        return v
+    v = word_shift(x, -kw)
+    if kb:
+        v = (v >> jnp.uint32(kb)) | (word_shift(v, -1) << jnp.uint32(32 - kb))
+    return v
+
+
+def ref_ripple_add(a, b, width: int, elem_mask_pattern: int | None = None):
+    """Bulk element-wise add over horizontally packed w-bit elements,
+    implemented with the same S/C iteration the PIM machine runs (but as one
+    fused jnp computation). Oracle for the fused adder kernel."""
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    interior = jnp.uint32(_interior_mask(width))
+    s = a ^ b
+    c = a & b
+    for _ in range(width - 1):
+        cs = ref_shift_cols(c, +1) & interior
+        c = s & cs
+        s = s ^ cs
+    return s
+
+
+def _interior_mask(width: int) -> int:
+    """32-bit tile of the 'all element bits except bit 0' pattern, as a plain
+    int (usable both under jit and as a static kernel parameter).
+
+    Valid whenever width divides 32 (1,2,4,8,16,32)."""
+    assert 32 % width == 0, "interior mask tiles only for width | 32"
+    pat = 0
+    for e in range(32 // width):
+        pat |= (((1 << width) - 1) & ~1) << (e * width)
+    return pat

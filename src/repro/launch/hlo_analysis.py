@@ -1,0 +1,396 @@
+"""Loop-aware cost analysis over compiled (post-SPMD) HLO text.
+
+Why: ``compiled.cost_analysis()`` counts a ``while`` body ONCE, but our layer
+stacks are lax.scan loops — flops/bytes/collectives would be low by a factor
+of ~n_layers. This module re-derives per-device costs by walking the HLO
+call graph and scaling loop bodies by their trip counts (taken from XLA's
+``known_trip_count`` backend config, falling back to the loop condition's
+comparison constant):
+
+  flops       : 2·|result|·|contracted| for every dot (incl. inside fusions)
+  hbm bytes   : operands+results of *top-level* instructions only (fusion
+                internals don't touch HBM). A fusion operand that is only
+                dynamic-sliced inside counts as the slice, not the full
+                array (scan weight indexing would otherwise overcount ×L).
+  collectives : ring-model link bytes per chip (factors in roofline.py)
+
+This is an analysis model, not a simulator — XLA:CPU layout copies are
+counted as written, and EXPERIMENTS.md reports the analytic config-level
+model alongside as a cross-check.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_WHILE_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"n":"(\d+)"')
+_GROUPS_SIZE_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_INT_RE = re.compile(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_SKIP_HBM = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "conditional",
+    "call", "custom-call-start", "iota",
+}
+
+
+def shape_dims(type_str: str):
+    return [(dt, [int(x) for x in dims.split(",") if x])
+            for dt, dims in _SHAPE_RE.findall(type_str)
+            if dt in _DTYPE_BYTES]
+
+
+def shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dtype, dims in shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+    def operands(self):
+        if "(" not in self.line:
+            return []
+        # operands live between the opcode's '(' and the matching ')'
+        tail = self.line.split(self.opcode + "(", 1)
+        if len(tail) < 2:
+            return []
+        return _OPERAND_RE.findall(tail[1].split("), ")[0])
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm: float = 0.0
+    link: float = 0.0
+    coll: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", scale: float = 1.0):
+        self.flops += other.flops * scale
+        self.hbm += other.hbm * scale
+        self.link += other.link * scale
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * scale
+
+
+class HloModule:
+    def __init__(self, text: str, n_devices: int):
+        self.n_devices = n_devices
+        self.comps: dict[str, list[Instr]] = {}
+        self.entry: str | None = None
+        self._parse(text)
+        self._cost_cache: dict[str, Cost] = {}
+        self._ptraffic_cache: dict[str, dict[int, float]] = {}
+
+    @staticmethod
+    def _parse_instr(line: str):
+        """Balanced-paren instruction parse: handles tuple result types with
+        layout braces and /*index=N*/ comments that defeat regexes."""
+        stripped = line.strip()
+        if stripped.startswith("ROOT "):
+            stripped = stripped[5:]
+        eq = stripped.find(" = ")
+        if eq < 0:
+            return None
+        name = stripped[:eq].strip().lstrip("%")
+        if not re.fullmatch(r"[\w.\-]+", name):
+            return None
+        rest = stripped[eq + 3:]
+        if rest.startswith("("):                      # tuple type
+            depth = 0
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        type_str = rest[:i + 1]
+                        tail = rest[i + 1:]
+                        break
+            else:
+                return None
+        else:
+            m = re.match(r"([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)", rest)
+            if not m:
+                return None
+            type_str = m.group(1)
+            tail = rest[m.end():]
+        m = _OPCODE_RE.match(tail)
+        if not m:
+            return None
+        return Instr(name, type_str, m.group(1), stripped)
+
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line.startswith(" "):
+                m = _HDR_RE.match(line)
+                if m:
+                    cur = m.group(2)
+                    self.comps[cur] = []
+                    if m.group(1):
+                        self.entry = cur
+                    continue
+            if cur is None or line.strip() == "}":
+                continue
+            instr = self._parse_instr(line)
+            if instr is not None:
+                self.comps[cur].append(instr)
+
+    def _types_of(self, comp: str):
+        return {i.name: i.type_str for i in self.comps.get(comp, [])}
+
+    def _trip_count(self, line: str) -> float:
+        m = _TRIP_RE.search(line)
+        if m:
+            return float(m.group(1))
+        mc = _COND_RE.search(line)
+        best = 1
+        if mc:
+            for i in self.comps.get(mc.group(1), []):
+                c = _CONST_INT_RE.search(i.line)
+                if c:
+                    best = max(best, int(c.group(1)))
+        return float(best)
+
+    def _group_size(self, line: str) -> int:
+        m = _GROUPS_SIZE_RE.search(line)
+        if m:
+            return int(m.group(2))
+        m = _GROUPS_RE.search(line)
+        if m and m.group(1).strip():
+            first = m.group(1).split("}")[0].strip("{ ")
+            n = len([t for t in first.split(",") if t.strip() != ""])
+            if n:
+                return n
+        return self.n_devices
+
+    def _dot_flops(self, instr: Instr, types: dict) -> float:
+        result = shape_dims(instr.type_str)
+        if not result:
+            return 0.0
+        rn = 1
+        for d in result[0][1]:
+            rn *= d
+        contracted = 1
+        m = _CONTRACT_RE.search(instr.line)
+        ops = instr.operands()
+        if m and ops:
+            lhs = shape_dims(types.get(ops[0], ""))
+            if lhs:
+                for idx in m.group(1).split(","):
+                    if idx and int(idx) < len(lhs[0][1]):
+                        contracted *= lhs[0][1][int(idx)]
+        return 2.0 * rn * contracted
+
+    def _collective(self, instr: Instr):
+        for k in COLLECTIVES:
+            if instr.opcode == k or instr.opcode.startswith(k + "-"):
+                if instr.opcode.endswith("-done"):
+                    return None
+                n = self._group_size(instr.line)
+                if n <= 1:
+                    return None
+                b = shape_bytes(instr.type_str)
+                ring = (n - 1) / n
+                if k == "all-reduce":
+                    return k, 2.0 * b * ring
+                if k == "reduce-scatter":
+                    return k, b * (n - 1)
+                if k == "collective-permute":
+                    return k, b
+                return k, b * ring
+        return None
+
+    def _param_traffic(self, comp: str) -> dict[int, float]:
+        """Per-parameter HBM traffic of a fused computation:
+        - consumed only by dynamic-slice   → the slice bytes (gather read)
+        - consumed only as the dynamic-update-slice TARGET → 0 (in-place
+          aliased buffer; the update itself is counted at the result)
+        - otherwise → full parameter bytes."""
+        if comp in self._ptraffic_cache:
+            return self._ptraffic_cache[comp]
+        instrs = self.comps.get(comp, [])
+        params = {}       # name -> (idx, bytes)
+        for i in instrs:
+            if i.opcode == "parameter":
+                m = _PARAM_IDX_RE.search(i.line)
+                if m:
+                    params[i.name] = (int(m.group(1)),
+                                      shape_bytes(i.type_str))
+        traffic = {idx: b for idx, b in params.values()}
+        consumers: dict[str, list[Instr]] = {}
+        for i in instrs:
+            for o in i.operands():
+                consumers.setdefault(o, []).append(i)
+        def effective_consumers(name, depth=0):
+            """Consumers with bitcast/copy/reshape treated as pass-through."""
+            out = []
+            for c in consumers.get(name, []):
+                if c.opcode in ("bitcast", "reshape", "copy", "convert") \
+                        and depth < 8:
+                    out.extend(effective_consumers(c.name, depth + 1))
+                else:
+                    out.append(c)
+            return out
+
+        for name, (idx, b) in params.items():
+            cons = effective_consumers(name)
+            if not cons:
+                continue
+            if all(c.opcode == "dynamic-slice" for c in cons):
+                traffic[idx] = sum(shape_bytes(c.type_str) for c in cons)
+            elif all(c.opcode == "dynamic-update-slice"
+                     and c.operands() and self._resolves_to(
+                         comp, c.operands()[0], name) for c in cons):
+                traffic[idx] = 0.0
+        self._ptraffic_cache[comp] = traffic
+        return traffic
+
+    def _resolves_to(self, comp: str, name: str, target: str,
+                     depth: int = 0) -> bool:
+        """True if ``name`` is ``target`` through bitcast/copy/reshape."""
+        if name == target:
+            return True
+        if depth > 8:
+            return False
+        by_name = {i.name: i for i in self.comps.get(comp, [])}
+        i = by_name.get(name)
+        if i is not None and i.opcode in ("bitcast", "reshape", "copy",
+                                          "convert"):
+            ops = i.operands()
+            if ops:
+                return self._resolves_to(comp, ops[0], target, depth + 1)
+        return False
+
+    def _result_traffic(self, comp: str, full_bytes: float) -> float:
+        """Result-side HBM bytes of a fused computation: if the ROOT is a
+        dynamic-update-slice (in-place buffer update, possibly behind
+        bitcast/copy), only the update slice is written, not the buffer."""
+        instrs = self.comps.get(comp, [])
+        if not instrs:
+            return full_bytes
+        by_name = {i.name: i for i in instrs}
+        root = instrs[-1]
+        hops = 0
+        while root.opcode in ("bitcast", "reshape", "copy", "convert") \
+                and hops < 8:
+            ops = root.operands()
+            if not ops or ops[0] not in by_name:
+                break
+            root = by_name[ops[0]]
+            hops += 1
+        if root.opcode == "dynamic-update-slice":
+            ops = root.operands()
+            types = self._types_of(comp)
+            if len(ops) >= 2 and ops[1] in types:
+                return 2.0 * shape_bytes(types[ops[1]])   # slice r+w
+        return full_bytes
+
+    def comp_cost(self, comp: str, _depth=0) -> Cost:
+        if comp in self._cost_cache:
+            return self._cost_cache[comp]
+        total = Cost()
+        self._cost_cache[comp] = total
+        if _depth > 64:
+            return total
+        types = self._types_of(comp)
+        for instr in self.comps.get(comp, []):
+            if instr.opcode == "while":
+                mb = _WHILE_RE.search(instr.line)
+                trips = self._trip_count(instr.line)
+                if mb:
+                    total.add(self.comp_cost(mb.group(1), _depth + 1), trips)
+                continue
+            if instr.opcode == "conditional":
+                m = _BRANCHES_RE.search(instr.line)
+                if m:
+                    costs = [self.comp_cost(b.strip().lstrip("%"), _depth + 1)
+                             for b in m.group(1).split(",")]
+                    if costs:
+                        total.add(max(costs, key=lambda c: c.flops + c.hbm))
+                continue
+            if instr.opcode in ("fusion", "call"):
+                m = _CALLS_RE.search(instr.line)
+                if m:
+                    sub = self.comp_cost(m.group(1), _depth + 1)
+                    total.flops += sub.flops
+                    total.link += sub.link
+                    for k, v in sub.coll.items():
+                        total.coll[k] = total.coll.get(k, 0.0) + v
+                    ptraffic = self._param_traffic(m.group(1))
+                    for i_op, _ in enumerate(instr.operands()):
+                        total.hbm += ptraffic.get(i_op, 0.0)
+                    total.hbm += self._result_traffic(
+                        m.group(1), shape_bytes(instr.type_str))
+                else:
+                    total.hbm += shape_bytes(instr.type_str)
+                continue
+            if instr.opcode == "dynamic-update-slice":
+                ops = instr.operands()
+                if len(ops) >= 2 and ops[1] in types:
+                    total.hbm += 2.0 * shape_bytes(types[ops[1]])
+                else:
+                    total.hbm += shape_bytes(instr.type_str)
+                continue
+            if instr.opcode == "dynamic-slice":
+                total.hbm += 2.0 * shape_bytes(instr.type_str)
+                continue
+            if instr.opcode in ("dot", "convolution"):
+                total.flops += self._dot_flops(instr, types)
+                total.hbm += shape_bytes(instr.type_str)
+                for o in instr.operands():
+                    if o in types:
+                        total.hbm += shape_bytes(types[o])
+                continue
+            c = self._collective(instr)
+            if c is not None:
+                k, b = c
+                total.coll[k] = total.coll.get(k, 0.0) + b
+                total.link += b
+                total.hbm += shape_bytes(instr.type_str)
+                continue
+            if instr.opcode in _SKIP_HBM:
+                continue
+            total.hbm += shape_bytes(instr.type_str)
+            for o in instr.operands():
+                if o in types:
+                    total.hbm += shape_bytes(types[o])
+        return total
+
+    def entry_cost(self) -> Cost:
+        return self.comp_cost(self.entry) if self.entry else Cost()
+
+
+def analyze(hlo_text: str, n_devices: int) -> Cost:
+    return HloModule(hlo_text, n_devices).entry_cost()

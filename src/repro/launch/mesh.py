@@ -1,0 +1,28 @@
+"""Production mesh builders (TPU v5e pods: 16×16 = 256 chips per pod).
+
+A FUNCTION, not a module constant — importing this module never touches jax
+device state (required so tests/benches see 1 CPU device while the dry-run
+sees 512 placeholder devices it configures itself).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host offers, as a 1×N (data, model) mesh — used by
+    small-scale integration tests."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The batch (data-parallel) axes of a production mesh."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

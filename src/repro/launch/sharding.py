@@ -1,0 +1,208 @@
+"""Path-regex sharding rule engine.
+
+``param_shardings(cfg, mesh, params_tree)`` maps every parameter leaf to a
+NamedSharding by matching its tree path against ordered rules. Rules specify
+the PartitionSpec of the *trailing* dims; leading stacked-layer axes are
+padded with None automatically. Before use, every sharded dim is checked for
+divisibility by its mesh axes — non-divisible dims degrade to replicated
+(collected in ``ShardingReport`` instead of failing the compile; a real
+cluster run reviews the report).
+
+Scheme (DESIGN.md §4): vocab/embef + attention heads + FFN hidden + MoE
+expert axis + SSM/RG-LRU channel axis on "model"; batch on ("pod","data");
+decode KV caches context-sharded (sequence dim on "model").
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes
+
+# (path regex, trailing-dims spec). First match wins; matched right-to-left
+# against the "/"-joined tree path.
+_RULES: list[tuple[str, tuple]] = [
+    # norms & scalar-ish leaves — replicated
+    (r"(ln1|ln2|ln|final_norm|kv_norm|q_norm|k_norm|dt_norm|b_norm|c_norm)"
+     r"(/[wb])?$", ()),
+    (r"(dt_bias|conv_b|b_a|b_x|lam|D)$", ()),
+    # embeddings / output heads
+    (r"embed$", ("model", None)),
+    (r"lm_head$", (None, "model")),
+    (r"heads$", (None, "model")),
+    # attention (GQA)
+    (r"attn/w[qkv]$", (None, "model")),
+    (r"attn/b[qkv]$", ("model",)),
+    (r"attn/wo$", ("model", None)),
+    # attention (MLA)
+    (r"attn/w_dkv$", (None, None)),
+    (r"attn/w_uk$", (None, "model", None)),
+    (r"attn/w_uv$", (None, "model", None)),
+    (r"attn/w_q$", (None, "model")),
+    (r"attn/w_o$", ("model", None)),
+    # MoE: expert-parallel stacks, replicated router
+    (r"ffn/router$", (None, None)),
+    (r"ffn/w[13]$", ("model", None, None)),
+    (r"ffn/w2$", ("model", None, None)),
+    # dense FFN / shared experts / hybrid MLP (incl. PIM-quantized forms)
+    (r"w[13]/(w|w_int)$", (None, "model")),
+    (r"w[13]/scales$", ("model",)),
+    (r"w[13]/b$", ("model",)),
+    (r"w2/(w|w_int)$", ("model", None)),
+    (r"w2/scales$", ()),
+    (r"w2/b$", ()),
+    # mamba
+    (r"mix/in_proj$", (None, "model")),
+    (r"mix/conv_w$", (None, "model")),
+    (r"mix/x_proj$", ("model", None)),
+    (r"mix/dt_proj$", (None, "model")),
+    (r"mix/A_log$", ("model", None)),
+    (r"mix/out_proj$", ("model", None)),
+    # attention living inside hybrid blocks (…/mix/ instead of …/attn/)
+    (r"mix/w[qkv]$", (None, "model")),
+    (r"mix/b[qkv]$", ("model",)),
+    (r"mix/wo$", ("model", None)),
+    # rg-lru
+    (r"mix/w_in$", (None, "model")),
+    (r"mix/w_gate_branch$", (None, "model")),
+    (r"mix/w_[ax]$", (None, "model")),
+    (r"mix/w_out$", ("model", None)),
+    # attention inside hybrid blocks reuses attn/* names via sub paths
+]
+
+
+@dataclasses.dataclass
+class ShardingReport:
+    matched: int = 0
+    fallback_replicated: list = dataclasses.field(default_factory=list)
+    degraded_dims: list = dataclasses.field(default_factory=list)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def spec_for(path: str, ndim: int, mesh, report: ShardingReport,
+             shape=None) -> P:
+    for pattern, trailing in _RULES:
+        if re.search(pattern, path):
+            report.matched += 1
+            spec = [None] * (ndim - len(trailing)) + list(trailing)
+            if shape is not None:
+                for i, ax in enumerate(spec):
+                    if ax is not None and shape[i] % _axis_size(mesh, ax):
+                        report.degraded_dims.append((path, i, ax, shape[i]))
+                        spec[i] = None
+            return P(*spec)
+    report.fallback_replicated.append(path)
+    return P(*([None] * ndim))
+
+
+_SP_ATTN_RE = re.compile(r"attn/(w[qkvo]|b[qkv]|w_o|w_q|w_uk|w_uv|w_dkv)$")
+
+
+def param_shardings(cfg, mesh, params_tree):
+    """→ (shardings pytree of NamedSharding, ShardingReport)."""
+    sp_attn = bool(getattr(cfg, "sp_attn", False))
+    report = ShardingReport()
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        if sp_attn and _SP_ATTN_RE.search(ps):
+            report.matched += 1
+            return NamedSharding(mesh, P(*([None] * np.ndim(leaf))))
+        spec = spec_for(ps, np.ndim(leaf), mesh, report,
+                        shape=np.shape(leaf))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_tree), report
+
+
+def batch_shardings(mesh, batch_tree, global_batch: int):
+    """Input batches: shard the batch dim over ("pod","data")."""
+    dp = dp_axes(mesh)
+
+    def one(leaf):
+        shape = np.shape(leaf)
+        spec = [None] * len(shape)
+        if shape and shape[0] == global_batch \
+                and shape[0] % _axis_size(mesh, dp) == 0:
+            spec[0] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(mesh, cache_tree, batch: int):
+    """Decode caches (stacked (L, B, ...)): batch dim on ("pod","data"),
+    then the largest divisible remaining dim on "model" — for attention
+    caches that is the sequence dim (context parallelism), for SSM states
+    the channel dim."""
+    dp = dp_axes(mesh)
+    model_size = mesh.shape["model"]
+    dp_size = _axis_size(mesh, dp)
+
+    def one(leaf):
+        shape = np.shape(leaf)
+        spec = [None] * len(shape)
+        b_idx = next((i for i, s in enumerate(shape[:2]) if s == batch), None)
+        if b_idx is not None and batch % dp_size == 0:
+            spec[b_idx] = dp
+        rest = [(s, i) for i, s in enumerate(shape)
+                if spec[i] is None and i != 0 and s % model_size == 0
+                and s >= model_size]
+        if rest:
+            _, i = max(rest)
+            spec[i] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache_tree)
+
+
+def opt_shardings(mesh, opt_tree, param_shardings_tree, zero1: bool = True):
+    """Optimizer moments follow their parameter's spec; with zero1=True the
+    leading (stacked-layer) dim additionally shards over "data" when
+    divisible (ZeRO-1-style state partitioning)."""
+    flat_ps = {}
+
+    def record(path, sh):
+        flat_ps[_path_str(path)] = sh
+
+    jax.tree_util.tree_map_with_path(record, param_shardings_tree)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        for prefix in ("mu/", "nu/", "residual/"):
+            if ps.startswith(prefix):
+                base = flat_ps.get(ps[len(prefix):])
+                if base is None:
+                    return NamedSharding(mesh, P())
+                spec = list(base.spec) + [None] * (np.ndim(leaf)
+                                                   - len(base.spec))
+                if zero1 and spec and spec[0] is None and np.ndim(leaf) \
+                        and np.shape(leaf)[0] % mesh.shape["data"] == 0:
+                    spec[0] = "data"
+                return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())            # step counter etc.
+
+    return jax.tree_util.tree_map_with_path(one, opt_tree)

@@ -1,0 +1,3 @@
+"""Model zoo: functional decoder stacks for all assigned architectures."""
+from .transformer import (decode_step, init_caches, init_params, loss_fn,
+                          prefill)

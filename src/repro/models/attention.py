@@ -1,0 +1,310 @@
+"""Attention variants: GQA/MQA (+RoPE, qk-norm, bias, sliding window) and
+DeepSeek-V2 MLA (with the absorbed-projection decode path).
+
+All softmax paths go through ``chunked_attention`` — a flash-style
+online-softmax over query/key chunks (pure JAX scans) so activations never
+materialize the (S, S) score matrix; this is what keeps the 4k-train and
+32k-prefill dry-run memory honest.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import (apply_norm, apply_rope, dense_init, dtype_of,
+                     make_norm_params, rmsnorm)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, pos_q, pos_k, *, window=None,
+                      q_chunk: int = 512, k_chunk: int = 1024,
+                      scale: float | None = None, impl: str = "flash"):
+    """Online-softmax attention.
+
+    q: (B, Sq, KV, G, dh) — query heads grouped by kv head
+    k: (B, Sk, KV, dh)
+    v: (B, Sk, KV, dv)
+    pos_q: (Sq,) int32; pos_k: (Sk,) or (B, Sk) int32 (−1 = invalid slot)
+    Causal: attend iff 0 <= pos_k <= pos_q (and pos_q − pos_k < window).
+    Returns (B, Sq, KV, G, dv).
+
+    impl="flash" uses the custom-VJP flash path (models/flash.py): backward
+    recomputes tiles instead of saving O(nq·nk) residuals — the §Perf
+    memory-bound optimization. impl="naive" keeps the plainly-differentiated
+    scan (the paper-faithful baseline for §Perf and the test oracle).
+    """
+    if impl == "flash":
+        from .flash import flash_attention
+        B, Sq, KV, G, dh = q.shape
+        sc = (1.0 / math.sqrt(dh)) if scale is None else scale
+        pq = pos_q.astype(jnp.float32)
+        pk = (pos_k if pos_k.ndim == 2 else pos_k[None, :]).astype(
+            jnp.float32)
+        return flash_attention(q, k, v, pq, pk, window, sc,
+                               q_chunk, k_chunk)
+    B, Sq, KV, G, dh = q.shape
+    Sk, dv = k.shape[1], v.shape[-1]
+    scale = (1.0 / math.sqrt(dh)) if scale is None else scale
+    qc = min(q_chunk, Sq)
+    kc = min(k_chunk, Sk)
+    while Sq % qc:
+        qc //= 2
+    while Sk % kc:
+        kc //= 2
+    nq, nk = Sq // qc, Sk // kc
+
+    if pos_k.ndim == 1:
+        pos_k = pos_k[None, :]                                   # (1, Sk)
+    pos_k = pos_k.astype(jnp.int32)
+    pos_q = pos_q.astype(jnp.int32)
+
+    # Pre-chunk along sequence axes; scan over chunk indices.
+    q_ch = q.reshape(B, nq, qc, KV, G, dh).transpose(1, 0, 2, 3, 4, 5)
+    k_ch = k.reshape(B, nk, kc, KV, dh).transpose(1, 0, 2, 3, 4)
+    v_ch = v.reshape(B, nk, kc, KV, dv).transpose(1, 0, 2, 3, 4)
+    pq_ch = pos_q.reshape(nq, qc)
+    pk_ch = pos_k.reshape(pos_k.shape[0], nk, kc).transpose(1, 0, 2)
+
+    def q_step(_, qx):
+        qb, pq = qx                                              # (B,qc,KV,G,dh)
+
+        def k_step(carry, kx):
+            m, l, acc = carry
+            kb, vb, pk = kx
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            ok = (pk[:, None, None, None, :] >= 0)
+            ok &= pk[:, None, None, None, :] <= pq[None, None, None, :, None]
+            if window is not None:
+                ok &= (pq[None, None, None, :, None]
+                       - pk[:, None, None, None, :]) < window
+            s = jnp.where(ok, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vb.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qc, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(k_step, (m0, l0, a0),
+                                      (k_ch, v_ch, pk_ch))
+        out = acc / jnp.maximum(l[..., None], 1e-30)             # (B,KV,G,qc,dv)
+        return None, out.transpose(0, 3, 1, 2, 4)                # (B,qc,KV,G,dv)
+
+    _, outs = jax.lax.scan(q_step, None, (q_ch, pq_ch))          # (nq,B,qc,...)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV, G, dv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg):
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    p = {
+        "wq": dense_init(ks[0], D, H * dh, dt),
+        "wk": dense_init(ks[1], D, KV * dh, dt),
+        "wv": dense_init(ks[2], D, KV * dh, dt),
+        "wo": dense_init(ks[3], H * dh, D, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), dt)
+        p["bk"] = jnp.zeros((KV * dh,), dt)
+        p["bv"] = jnp.zeros((KV * dh,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dt)
+        p["k_norm"] = jnp.ones((dh,), dt)
+    return p
+
+
+def _gqa_qkv(cfg, p, x, positions):
+    B, S, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"] + (p["bq"] if "bq" in p else 0)
+    k = x @ p["wk"] + (p["bk"] if "bk" in p else 0)
+    v = x @ p["wv"] + (p["bv"] if "bv" in p else 0)
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, KV, dh)
+    v = v.reshape(B, S, KV, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_train(cfg, p, x, positions, window=None):
+    """Full causal attention; returns (out, (k, v) for cache building)."""
+    B, S, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _gqa_qkv(cfg, p, x, positions)
+    if cfg.sp_attn and S > 1:
+        # Sequence-parallel attention: queries sharded on S over "model",
+        # (small GQA) k/v gathered — avoids per-layer head resharding when
+        # n_heads is not divisible by the model axis.
+        from jax.sharding import PartitionSpec as _P
+        q = jax.lax.with_sharding_constraint(
+            q, _P(None, "model", None, None))
+        k = jax.lax.with_sharding_constraint(k, _P(None, None, None, None))
+        v = jax.lax.with_sharding_constraint(v, _P(None, None, None, None))
+    qg = q.reshape(B, S, KV, H // KV, dh)
+    out = chunked_attention(qg, k, v, positions, positions, window=window,
+                            q_chunk=cfg.attn_q_chunk,
+                            k_chunk=cfg.attn_k_chunk, impl=cfg.attn_impl)
+    out = out.reshape(B, S, H * dh)
+    if cfg.sp_attn and S > 1:
+        from jax.sharding import PartitionSpec as _P
+        out = jax.lax.with_sharding_constraint(out, _P(None, "model", None))
+    return out @ p["wo"], (k, v)
+
+
+def gqa_decode(cfg, p, x, pos, cache, window=None):
+    """One-token decode. cache: {k:(B,Sc,KV,dh), v:..., kpos:(B,Sc)}."""
+    B, S, D = x.shape
+    assert S == 1
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k, v = _gqa_qkv(cfg, p, x, positions)
+    slot = pos % cache["k"].shape[1]                 # ring for SWA, id for full
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    kpos = jax.lax.dynamic_update_slice(
+        cache["kpos"], jnp.full((B, 1), pos, jnp.int32), (0, slot))
+    qg = q.reshape(B, 1, KV, H // KV, dh)
+    out = chunked_attention(qg, ck, cv, positions, kpos, window=window,
+                            q_chunk=1, k_chunk=cfg.attn_k_chunk,
+                            impl=cfg.attn_impl)
+    out = out.reshape(B, 1, H * dh)
+    return out @ p["wo"], {"k": ck, "v": cv, "kpos": kpos}
+
+
+def gqa_init_cache(cfg, batch: int, max_len: int):
+    KV, dh = cfg.n_kv_heads, cfg.head_dim
+    cache_len = min(max_len, cfg.sliding_window or max_len)
+    dt = dtype_of(cfg)
+    return {
+        "k": jnp.zeros((batch, cache_len, KV, dh), dt),
+        "v": jnp.zeros((batch, cache_len, KV, dh), dt),
+        "kpos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "w_dkv": dense_init(ks[0], D, m.kv_lora_rank + m.qk_rope_head_dim, dt),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dt),
+        "w_uk": (dense_init(ks[1], m.kv_lora_rank, H * m.qk_nope_head_dim, dt)
+                 .reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)),
+        "w_uv": (dense_init(ks[2], m.kv_lora_rank, H * m.v_head_dim, dt)
+                 .reshape(m.kv_lora_rank, H, m.v_head_dim)),
+        "w_q": dense_init(ks[3], D,
+                          H * (m.qk_nope_head_dim + m.qk_rope_head_dim), dt),
+        "w_o": dense_init(ks[4], H * m.v_head_dim, D, dt),
+    }
+
+
+def _mla_q(cfg, p, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q = (x @ p["w_q"]).reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(cfg, p, x, positions):
+    m = cfg.mla
+    dkv = x @ p["w_dkv"]
+    c_kv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_train(cfg, p, x, positions):
+    """Non-absorbed path: materialize per-head k/v (best for long matmuls)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    c_kv, k_rope = _mla_ckv(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uv"])
+    # Concatenate nope+rope feature dims: one softmax attention.
+    qc = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]
+    qc = qc.transpose(0, 1, 2, 3, 4)                    # (B,S,H,1,dh+rope)
+    kc = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, m.qk_rope_head_dim))], axis=-1)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    out = chunked_attention(qc, kc, v, positions, positions, scale=scale,
+                            q_chunk=cfg.attn_q_chunk,
+                            k_chunk=cfg.attn_k_chunk, impl=cfg.attn_impl)
+    out = out.reshape(B, S, H * m.v_head_dim)
+    return out @ p["w_o"], (c_kv, k_rope)
+
+
+def mla_decode(cfg, p, x, pos, cache):
+    """Absorbed path: score against the rank-512 latent cache directly —
+    the MLA serving trick that makes the KV cache 576 B/token-equivalent."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    assert S == 1
+    H = cfg.n_heads
+    positions = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    c_kv, k_rope = _mla_ckv(cfg, p, x, positions)
+    ck = jax.lax.dynamic_update_slice(cache["ckv"], c_kv, (0, pos, 0))
+    cr = jax.lax.dynamic_update_slice(cache["krope"], k_rope, (0, pos, 0))
+    kpos = jax.lax.dynamic_update_slice(
+        cache["kpos"], jnp.full((B, 1), pos, jnp.int32), (0, pos))
+    # Absorb W_uk into q; treat [latent ⊕ rope] as the key/value stream.
+    q_abs = jnp.einsum("bthd,rhd->bthr", q_nope, p["w_uk"])
+    qc = jnp.concatenate([q_abs, q_rope], axis=-1)[:, :, None, :, :]
+    qc = qc.transpose(0, 1, 2, 3, 4)                    # (B,1,1,H,rank+rope)
+    kc = jnp.concatenate([ck, cr], axis=-1)[:, :, None, :]   # (B,Sc,1,r+rope)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    ctx = chunked_attention(qc, kc, ck[:, :, None, :], positions, kpos,
+                            q_chunk=1, k_chunk=cfg.attn_k_chunk, scale=scale,
+                            impl=cfg.attn_impl)          # (B,1,1,H,rank)
+    ctx = ctx.reshape(B, 1, H, m.kv_lora_rank)
+    v_ctx = jnp.einsum("bthr,rhd->bthd", ctx, p["w_uv"])
+    out = v_ctx.reshape(B, 1, H * m.v_head_dim)
+    return out @ p["w_o"], {"ckv": ck, "krope": cr, "kpos": kpos}
+
+
+def mla_init_cache(cfg, batch: int, max_len: int):
+    m = cfg.mla
+    dt = dtype_of(cfg)
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+        "krope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dt),
+        "kpos": jnp.full((batch, max_len), -1, jnp.int32),
+    }

@@ -1,0 +1,145 @@
+"""Shared building blocks: norms, RoPE, initializers, linear (incl. PIM-quant).
+
+All modules are pure functions over explicit parameter pytrees (nested dicts)
+— no framework objects — so the whole stack jits, scans, shards and
+checkpoints uniformly.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * weight
+
+
+def layernorm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return out.astype(dt) * weight + bias
+
+
+def make_norm_params(cfg, d: int):
+    if cfg.norm == "rmsnorm":
+        return {"w": jnp.ones((d,), dtype_of(cfg))}
+    return {"w": jnp.ones((d,), dtype_of(cfg)),
+            "b": jnp.zeros((d,), dtype_of(cfg))}
+
+
+def apply_norm(cfg, p, x):
+    if "b" in p:
+        return layernorm(x, p["w"], p["b"])
+    return rmsnorm(x, p["w"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_emb(positions, d_model: int):
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Linear — dense bf16 or the paper's bit-plane PIM-quantized path
+# ---------------------------------------------------------------------------
+
+def make_linear_params(key, cfg, d_in: int, d_out: int, bias: bool = False,
+                       quantize: bool = False):
+    p = {"w": dense_init(key, d_in, d_out, dtype_of(cfg))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype_of(cfg))
+    if quantize and cfg.quant:
+        from repro.kernels.pim_matmul import ops as pm
+        w_int, scales = pm.quantize(p["w"].astype(jnp.float32),
+                                    cfg.quant_bits)
+        p = {"w_int": w_int, "scales": scales}
+        if bias:
+            p["b"] = jnp.zeros((d_out,), dtype_of(cfg))
+    return p
+
+
+def linear(cfg, p, x):
+    """Apply a linear layer; dispatches to the PIM bit-plane path when the
+    params are quantized. The XLA bit-plane formulation is used under jit so
+    the op shards/lowers everywhere; the Pallas kernel is the TPU execution
+    path for the same math (see kernels/pim_matmul)."""
+    if "w_int" in p:
+        y = pim_matmul_xla(x, p["w_int"], p["scales"],
+                           mode=cfg.quant_mode, bits=cfg.quant_bits,
+                           out_dtype=x.dtype)
+    else:
+        y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def pim_matmul_xla(x, w_int, scales, *, mode: str, bits: int, out_dtype):
+    """Shardable XLA formulation of the bit-plane matmul (same math as the
+    Pallas kernel; used for distributed lowering / dry-run cost analysis)."""
+    from repro.kernels.pim_matmul.ref import plane_coeffs
+    xf = x.astype(jnp.bfloat16)
+    if mode == "dequant":
+        w = (w_int.astype(jnp.float32) * scales[None, :]).astype(jnp.bfloat16)
+        return (xf @ w).astype(out_dtype)
+    wu = w_int.astype(jnp.int32) & ((1 << bits) - 1)
+    acc = None
+    for i, c in enumerate(plane_coeffs(bits)):
+        plane = ((wu >> i) & 1).astype(jnp.bfloat16)
+        term = c * jnp.einsum("...k,kn->...n", xf, plane,
+                              preferred_element_type=jnp.float32)
+        acc = term if acc is None else acc + term
+    return (acc * scales).astype(out_dtype)

@@ -1,0 +1,192 @@
+"""Feed-forward variants: dense (SwiGLU / GELU / GeGLU) and Mixture-of-Experts.
+
+MoE is the GShard-style capacity dispatch, expressed as einsums so the expert
+axis shards cleanly on the ``model`` mesh axis (EP). Tokens are processed in
+chunks (lax.scan) so the (tokens, experts, capacity) dispatch tensor stays
+bounded regardless of global batch; over-capacity tokens are dropped
+(standard capacity semantics), with the capacity factor a config knob.
+
+Dense FFNs route through ``common.linear`` so the paper's PIM bit-plane
+quantized path (cfg.quant) applies transparently.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, dtype_of, linear, make_linear_params
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+def init_dense_ffn(key, cfg, d_ff: int, quantize: bool = True):
+    D = cfg.d_model
+    ks = jax.random.split(key, 3)
+    bias = cfg.mlp_bias
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "w1": make_linear_params(ks[0], cfg, D, d_ff, bias, quantize),
+            "w3": make_linear_params(ks[1], cfg, D, d_ff, bias, quantize),
+            "w2": make_linear_params(ks[2], cfg, d_ff, D, bias, quantize),
+        }
+    return {
+        "w1": make_linear_params(ks[0], cfg, D, d_ff, bias, quantize),
+        "w2": make_linear_params(ks[2], cfg, d_ff, D, bias, quantize),
+    }
+
+
+def dense_ffn(cfg, p, x):
+    if cfg.act == "swiglu":
+        return linear(cfg, p["w2"],
+                      jax.nn.silu(linear(cfg, p["w1"], x))
+                      * linear(cfg, p["w3"], x))
+    if cfg.act == "geglu":
+        return linear(cfg, p["w2"],
+                      jax.nn.gelu(linear(cfg, p["w1"], x))
+                      * linear(cfg, p["w3"], x))
+    return linear(cfg, p["w2"], jax.nn.gelu(linear(cfg, p["w1"], x)))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg):
+    m = cfg.moe
+    D, F, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(D)
+    p = {
+        "router": dense_init(ks[0], D, E, jnp.float32),
+        "w1": (jax.random.normal(ks[1], (E, D, F), jnp.float32)
+               * scale).astype(dt),
+        "w3": (jax.random.normal(ks[2], (E, D, F), jnp.float32)
+               * scale).astype(dt),
+        "w2": (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+               * (1.0 / math.sqrt(F))).astype(dt),
+    }
+    if m.n_shared_experts:
+        p["shared"] = init_dense_ffn(ks[4], cfg,
+                                     m.d_ff_expert * m.n_shared_experts)
+    return p
+
+
+def _capacity(chunk: int, cfg) -> int:
+    m = cfg.moe
+    c = int(math.ceil(chunk * m.top_k * m.capacity_factor / m.n_experts))
+    return max(4, -(-c // 4) * 4)                      # pad to multiple of 4
+
+
+def _router(cfg, p, xc):
+    m = cfg.moe
+    logits = (xc.astype(jnp.float32) @ p["router"])              # (c, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)                   # (c, K)
+    if m.norm_topk_prob:
+        gates = gates / jnp.maximum(
+            jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss terms.
+    f = jnp.mean(jax.nn.one_hot(idx[:, 0], m.n_experts,
+                                dtype=jnp.float32), axis=0)
+    pbar = jnp.mean(probs, axis=0)
+    aux = m.n_experts * jnp.sum(f * pbar)
+    return gates, idx, aux
+
+
+def _expert_ffn(p, xe):
+    """xe: (E, C, D) → (E, C, D), stacked-expert SwiGLU."""
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w1"]))
+         * jnp.einsum("ecd,edf->ecf", xe, p["w3"]))
+    return jnp.einsum("ecf,efd->ecd", h, p["w2"])
+
+
+def _gather_chunk(cfg, p, xc, C):
+    """Scatter/gather dispatch (§Perf): replaces the O(T·E·C·D) one-hot
+    einsums with O(T·E) routing bookkeeping + pure gather/scatter-add data
+    movement. Same capacity-drop semantics, slot-major priority."""
+    m = cfg.moe
+    E, K = m.n_experts, m.top_k
+    c = xc.shape[0]
+    gates, idx, aux = _router(cfg, p, xc)
+    # slot-major flattening (all tokens' slot 0 first — GShard priority)
+    e_sm = idx.T.reshape(-1)                                     # (Kc,)
+    g_sm = gates.T.reshape(-1)
+    tok_sm = jnp.tile(jnp.arange(c, dtype=jnp.int32), K)
+    oh = jax.nn.one_hot(e_sm, E, dtype=jnp.int32)                # (Kc, E)
+    pos = jnp.take_along_axis(jnp.cumsum(oh, axis=0) - 1,
+                              e_sm[:, None], axis=1)[:, 0]       # (Kc,)
+    keep = pos < C
+    pos_w = jnp.where(keep, pos, C)                              # C = dump col
+    # slot tables (E, C+1): token index and gate per expert slot
+    slot_tok = jnp.full((E, C + 1), -1, jnp.int32).at[
+        e_sm, pos_w].set(tok_sm)[:, :C]
+    slot_gate = jnp.zeros((E, C + 1), jnp.float32).at[
+        e_sm, pos_w].set(g_sm)[:, :C]
+    valid = slot_tok >= 0
+    xe = xc[jnp.clip(slot_tok, 0, c - 1)] \
+        * valid[..., None].astype(xc.dtype)                      # (E, C, D)
+    ye = _expert_ffn(p, xe)                                      # (E, C, D)
+    contrib = ye.astype(jnp.float32) * slot_gate[..., None]
+    y = jnp.zeros((c, xc.shape[1]), jnp.float32).at[
+        jnp.clip(slot_tok, 0, c - 1).reshape(-1)].add(
+        contrib.reshape(E * C, -1) * valid.reshape(E * C, 1))
+    return y.astype(xc.dtype), aux
+
+
+def moe_ffn(cfg, p, x):
+    """x: (B, S, D) → (y, aux_loss)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    xf = x.reshape(T, D)
+    chunk = min(m.dispatch_chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    nch = T // chunk
+    C = _capacity(chunk, cfg)
+    E, K = m.n_experts, m.top_k
+
+    def one_chunk_gather(carry, xc):
+        y, aux = _gather_chunk(cfg, p, xc, C)
+        return carry, (y, aux)
+
+    def one_chunk(carry, xc):
+        logits = (xc.astype(jnp.float32) @ p["router"])          # (c, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, K)                     # (c, K)
+        if m.norm_topk_prob:
+            gates = gates / jnp.maximum(
+                jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+        counts = jnp.zeros((E,), jnp.float32)
+        dispatch = jnp.zeros((chunk, E, C), jnp.bfloat16)
+        combine = jnp.zeros((chunk, E, C), jnp.float32)
+        for slot in range(K):                                    # priority
+            oh = jax.nn.one_hot(idx[:, slot], E, dtype=jnp.float32)
+            pos = jnp.cumsum(oh, axis=0) - 1.0 + counts[None, :]
+            counts = counts + jnp.sum(oh, axis=0)
+            keep = (pos < C) * oh                                # (c, E)
+            pos_c = jnp.clip(pos, 0, C - 1).astype(jnp.int32)
+            oh_c = jax.nn.one_hot(pos_c, C, dtype=jnp.float32) \
+                * keep[..., None]                                # (c, E, C)
+            dispatch = dispatch + oh_c.astype(jnp.bfloat16)
+            combine = combine + oh_c * gates[:, slot, None, None]
+        xe = jnp.einsum("td,tec->ecd", xc.astype(jnp.bfloat16), dispatch)
+        ye = _expert_ffn(p, xe)                                  # (E, C, D)
+        yc = jnp.einsum("ecd,tec->td", ye.astype(jnp.float32), combine)
+        # Switch-style load-balance loss.
+        f = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)
+        pbar = jnp.mean(probs, axis=0)
+        aux = E * jnp.sum(f * pbar)
+        return carry, (yc.astype(x.dtype), aux)
+
+    xs = xf.reshape(nch, chunk, D)
+    body = one_chunk_gather if m.impl == "gather" else one_chunk
+    _, (ys, auxs) = jax.lax.scan(body, None, xs)
+    y = ys.reshape(B, S, D)
+    if m.n_shared_experts:
+        y = y + dense_ffn(cfg, p["shared"], x)
+    return y, m.router_aux_weight * jnp.mean(auxs)

@@ -1,0 +1,167 @@
+"""Flash attention with a memory-correct custom VJP (pure JAX scans).
+
+The naive differentiable online-softmax scan saves every (q-chunk × k-chunk)
+intermediate for the backward pass — O(nq·nk·qc·kc) f32 residuals, hundreds
+of GB/device at 4k–32k sequence lengths. This custom_vjp saves only
+(q, k, v, out, lse) and recomputes each tile in the backward, the standard
+FlashAttention-2 recurrence:
+
+  fwd : per kv-chunk online softmax (m, l, acc) → out, lse = m + log l
+  bwd : delta = Σ dO∘O; per kv-chunk j, per q-chunk i:
+            p  = exp(qk^T·scale − lse)
+            dv_j += pᵀ dO ;  dp = dO vᵀ ;  ds = p∘(dp − delta)·scale
+            dk_j += dsᵀ q ;  dq_i += ds k
+
+Positions are passed as f32 (cast by the caller) so cotangents are plain
+zeros. Shapes follow attention.py: q (B,Sq,KV,G,dh), k/v (B,Sk,KV,dh|dv).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunks(x, axis_len, c, batch_first_dims):
+    del axis_len, batch_first_dims
+    return x, c
+
+
+def _mask(pq, pk, window):
+    """pq: (qc,), pk: (B?, kc) f32 → (B,1,1,qc,kc) bool."""
+    ok = pk[:, None, None, None, :] >= 0
+    ok &= pk[:, None, None, None, :] <= pq[None, None, None, :, None]
+    if window is not None:
+        ok &= (pq[None, None, None, :, None]
+               - pk[:, None, None, None, :]) < window
+    return ok
+
+
+def _fwd_impl(q, k, v, pos_q, pos_k, window, scale, q_chunk, k_chunk):
+    B, Sq, KV, G, dh = q.shape
+    Sk, dv = k.shape[1], v.shape[-1]
+    qc, kc = min(q_chunk, Sq), min(k_chunk, Sk)
+    while Sq % qc:
+        qc //= 2
+    while Sk % kc:
+        kc //= 2
+    nq, nk = Sq // qc, Sk // kc
+
+    pk = (pos_k if pos_k.ndim == 2 else pos_k[None, :])
+    q_ch = q.reshape(B, nq, qc, KV, G, dh).transpose(1, 0, 2, 3, 4, 5)
+    k_ch = k.reshape(B, nk, kc, KV, dh).transpose(1, 0, 2, 3, 4)
+    v_ch = v.reshape(B, nk, kc, KV, dv).transpose(1, 0, 2, 3, 4)
+    pq_ch = pos_q.reshape(nq, qc)
+    pk_ch = pk.reshape(pk.shape[0], nk, kc).transpose(1, 0, 2)
+
+    def q_step(_, qx):
+        qb, pq = qx
+
+        def k_step(carry, kx):
+            m, l, acc = carry
+            kb, vb, pkc = kx
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            s = jnp.where(_mask(pq, pkc, window), s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc * corr[..., None] + pv), None
+
+        m0 = jnp.full((B, KV, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qc, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(k_step, (m0, l0, a0),
+                                      (k_ch, v_ch, pk_ch))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out.transpose(0, 3, 1, 2, 4), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (q_ch, pq_ch))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV, G, dv)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, KV, G, Sq)
+    return out.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def flash_attention(q, k, v, pos_q, pos_k, window, scale, q_chunk, k_chunk):
+    out, _ = _fwd_impl(q, k, v, pos_q, pos_k, window, scale, q_chunk,
+                       k_chunk)
+    return out
+
+
+def _flash_fwd(q, k, v, pos_q, pos_k, window, scale, q_chunk, k_chunk):
+    out, lse = _fwd_impl(q, k, v, pos_q, pos_k, window, scale, q_chunk,
+                         k_chunk)
+    return out, (q, k, v, pos_q, pos_k, out, lse)
+
+
+def _flash_bwd(window, scale, q_chunk, k_chunk, res, dout):
+    q, k, v, pos_q, pos_k, out, lse = res
+    B, Sq, KV, G, dh = q.shape
+    Sk, dv = k.shape[1], v.shape[-1]
+    qc, kc = min(q_chunk, Sq), min(k_chunk, Sk)
+    while Sq % qc:
+        qc //= 2
+    while Sk % kc:
+        kc //= 2
+    nq, nk = Sq // qc, Sk // kc
+
+    doutf = dout.astype(jnp.float32)
+    outf = out.astype(jnp.float32)
+    delta = jnp.sum(doutf * outf, axis=-1)               # (B,Sq,KV,G)
+    delta = delta.transpose(0, 2, 3, 1)                  # (B,KV,G,Sq)
+
+    pk = (pos_k if pos_k.ndim == 2 else pos_k[None, :])
+    q_ch = q.reshape(B, nq, qc, KV, G, dh).transpose(1, 0, 2, 3, 4, 5)
+    do_ch = doutf.reshape(B, nq, qc, KV, G, dv).transpose(1, 0, 2, 3, 4, 5)
+    k_ch = k.reshape(B, nk, kc, KV, dh).transpose(1, 0, 2, 3, 4)
+    v_ch = v.reshape(B, nk, kc, KV, dv).transpose(1, 0, 2, 3, 4)
+    pq_ch = pos_q.reshape(nq, qc)
+    pk_ch = pk.reshape(pk.shape[0], nk, kc).transpose(1, 0, 2)
+    lse_ch = lse.reshape(B, KV, G, nq, qc).transpose(3, 0, 1, 2, 4)
+    dl_ch = delta.reshape(B, KV, G, nq, qc).transpose(3, 0, 1, 2, 4)
+
+    def kv_step(dq_acc, kx):
+        kb, vb, pkc = kx
+
+        def q_step(carry, qx):
+            dk_j, dv_j = carry
+            qb, dob, pq, lse_i, dl_i = qx
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            s = jnp.where(_mask(pq, pkc, window), s, NEG_INF)
+            p = jnp.exp(s - lse_i[..., None])             # (B,KV,G,qc,kc)
+            dv_c = jnp.einsum("bkgqs,bqkgd->bskd", p,
+                              dob)                        # (B,kc,KV,dv)
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", dob, vb.astype(jnp.float32))
+            ds = p * (dp - dl_i[..., None]) * scale
+            dk_c = jnp.einsum("bkgqs,bqkgd->bskd", ds,
+                              qb.astype(jnp.float32))
+            dq_c = jnp.einsum("bkgqs,bskd->bqkgd", ds,
+                              kb.astype(jnp.float32))     # (B,qc,KV,G,dh)
+            return (dk_j + dk_c, dv_j + dv_c), dq_c
+
+        dk0 = jnp.zeros((B, kc, KV, dh), jnp.float32)
+        dv0 = jnp.zeros((B, kc, KV, dv), jnp.float32)
+        (dk_j, dv_j), dq_parts = jax.lax.scan(
+            q_step, (dk0, dv0), (q_ch, do_ch, pq_ch, lse_ch, dl_ch))
+        dq_full = dq_parts.transpose(1, 0, 2, 3, 4, 5).reshape(
+            B, Sq, KV, G, dh)
+        return dq_acc + dq_full, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, Sq, KV, G, dh), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(kv_step, dq0, (k_ch, v_ch, pk_ch))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KV, dh)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KV, dv)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            jnp.zeros_like(pos_q), jnp.zeros_like(pos_k))
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin family).
+
+    r_t = sigmoid(x_t @ W_a + b_a)            (recurrence gate)
+    i_t = sigmoid(x_t @ W_x + b_x)            (input gate)
+    a_t = exp(c * log(sigmoid(Λ)) * r_t)      (data-dependent decay)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+wrapped in the Griffin temporal block: dual in-projection (value branch →
+conv1d → RG-LRU; gate branch → GeLU), multiplicative merge, out-projection.
+Training uses the same chunked associative scan as ``ssm.py`` (element-wise
+state — no d_state axis). Decode carries (h, conv) — O(1) state, which is
+what qualifies the arch for the 500k long-context cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, dtype_of
+
+
+def init_rglru(key, cfg):
+    r = cfg.rglru
+    D, W = cfg.d_model, r.lru_width
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], D, W, dt),
+        "w_gate_branch": dense_init(ks[1], D, W, dt),
+        "conv_w": (jax.random.normal(ks[2], (r.d_conv, W), jnp.float32)
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((W,), dt),
+        "w_a": dense_init(ks[3], W, W, dt),
+        "b_a": jnp.zeros((W,), jnp.float32),
+        "w_x": dense_init(ks[4], W, W, dt),
+        "b_x": jnp.zeros((W,), jnp.float32),
+        # Λ init so a ≈ 0.9..0.999 at r=1 (standard LRU init range).
+        "lam": jnp.linspace(2.0, 6.0, W).astype(jnp.float32),
+        "w_out": dense_init(ks[5], W, D, dt),
+    }
+
+
+def _conv_causal(p, x, d_conv):
+    pad = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * p["conv_w"][i]
+              for i in range(d_conv))
+    return out + p["conv_b"]
+
+
+def _gates(cfg, p, u):
+    """u: (B,*,W) value branch → a_t, beta_t·x_t terms (f32)."""
+    uf = u.astype(jnp.float32)
+    rg = jax.nn.sigmoid(uf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    ig = jax.nn.sigmoid(uf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a0 = jax.nn.log_sigmoid(p["lam"])                 # (W,) ≤ 0
+    log_a = cfg.rglru.c_exponent * log_a0 * rg
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * ig * uf
+
+
+def rglru_train(cfg, p, x):
+    """x: (B, S, D) → (B, S, D)."""
+    r = cfg.rglru
+    B, S, D = x.shape
+    W = r.lru_width
+    u_pre = x @ p["w_in"]
+    u = _conv_causal(p, u_pre, r.d_conv)
+    gate = jax.nn.gelu(x @ p["w_gate_branch"])
+    a, bx = _gates(cfg, p, u)                             # (B,S,W) f32
+
+    chunk = min(r.scan_chunk, S)
+    Sp = -(-S // chunk) * chunk
+    if Sp != S:
+        # Identity-padded recurrence steps (a=1, b=0): exact final state.
+        a = jnp.pad(a, ((0, 0), (0, Sp - S), (0, 0)), constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, Sp - S), (0, 0)))
+    nch = Sp // chunk
+
+    def chunk_step(h0, xs):
+        a_c, b_c = xs
+
+        def combine(l, rr):
+            al, bl = l
+            ar, br = rr
+            return al * ar, bl * ar + br
+
+        a_s, b_s = jax.lax.associative_scan(combine, (a_c, b_c), axis=1)
+        h = a_s * h0[:, None] + b_s
+        return h[:, -1], h
+
+    a_ch = a.reshape(B, nch, chunk, W).transpose(1, 0, 2, 3)
+    b_ch = bx.reshape(B, nch, chunk, W).transpose(1, 0, 2, 3)
+    h0 = jnp.zeros((B, W), jnp.float32)
+    h_last, hs = jax.lax.scan(chunk_step, h0, (a_ch, b_ch))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, Sp, W)[:, :S]
+    y = h.astype(x.dtype) * gate
+    state = {"h": h_last, "conv": u_pre[:, S - (r.d_conv - 1):, :]}
+    return y @ p["w_out"], state
+
+
+def rglru_decode(cfg, p, x, state):
+    """x: (B,1,D); state: {"h": (B,W) f32, "conv": (B, d_conv-1, W)}."""
+    r = cfg.rglru
+    u_pre = x @ p["w_in"]                                  # (B,1,W)
+    window = jnp.concatenate([state["conv"], u_pre], axis=1)
+    conv = jnp.einsum("bcw,cw->bw", window.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(
+        jnp.float32)
+    u = conv[:, None, :].astype(x.dtype)
+    gate = jax.nn.gelu(x @ p["w_gate_branch"])
+    a, bx = _gates(cfg, p, u)                              # (B,1,W)
+    h = a[:, 0] * state["h"] + bx[:, 0]
+    y = h[:, None, :].astype(x.dtype) * gate
+    return y @ p["w_out"], {"h": h, "conv": window[:, 1:]}
+
+
+def rglru_init_state(cfg, batch: int):
+    r = cfg.rglru
+    return {
+        "h": jnp.zeros((batch, r.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, r.d_conv - 1, r.lru_width), dtype_of(cfg)),
+    }

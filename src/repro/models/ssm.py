@@ -1,0 +1,155 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b family).
+
+Training/prefill uses a chunked parallel scan: lax.scan over sequence chunks
+carrying the (B, d_inner, d_state) state, with an associative scan inside
+each chunk — the (B, chunk, d_inner, d_state) intermediate is the only large
+activation and its size is a config knob (ssm.scan_chunk).
+
+Decode is the O(1)-state recurrence with a ring conv state — this is what
+makes the arch eligible for the 500k-token long-context cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, dtype_of, rmsnorm
+
+
+def init_mamba(key, cfg):
+    s = cfg.ssm
+    D = cfg.d_model
+    I = s.expand * D
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": dense_init(ks[0], D, 2 * I, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, I), jnp.float32)
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((I,), dt),
+        "x_proj": dense_init(ks[2], I, s.dt_rank + 2 * s.d_state, dt),
+        "dt_proj": dense_init(ks[3], s.dt_rank, I, dt),
+        "dt_bias": jnp.full((I,), -4.6, jnp.float32),   # softplus ≈ 0.01
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, s.d_state + 1,
+                                             dtype=jnp.float32), (I, 1))),
+        "D": jnp.ones((I,), jnp.float32),
+        "out_proj": dense_init(ks[4], I, D, dt),
+    }
+    if s.extra_norms:
+        p["dt_norm"] = jnp.ones((s.dt_rank,), dt)
+        p["b_norm"] = jnp.ones((s.d_state,), dt)
+        p["c_norm"] = jnp.ones((s.d_state,), dt)
+    return p
+
+
+def _conv_train(p, x, d_conv):
+    """Causal depthwise conv over (B, S, I)."""
+    pad = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * p["conv_w"][i]
+              for i in range(d_conv))
+    return out + p["conv_b"]
+
+
+def mamba_train(cfg, p, x):
+    """x: (B, S, D) → (B, S, D). Chunked parallel selective scan."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    I = s.expand * D
+    N = s.d_state
+    xz = x @ p["in_proj"]
+    u_pre, z = jnp.split(xz, 2, axis=-1)
+    u = jax.nn.silu(_conv_train(p, u_pre, s.d_conv))
+    dbc = u @ p["x_proj"]
+    dt_r, Bm, Cm = jnp.split(dbc, [s.dt_rank, s.dt_rank + s.d_state], axis=-1)
+    if s.extra_norms:
+        dt_r = rmsnorm(dt_r, p["dt_norm"])
+        Bm = rmsnorm(Bm, p["b_norm"])
+        Cm = rmsnorm(Cm, p["c_norm"])
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32)
+                         @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                     # (I, N)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    chunk = min(s.scan_chunk, S)
+    Sp = -(-S // chunk) * chunk
+    if Sp != S:
+        # Pad with identity recurrence steps (dt=0 → a=1, b=0): the final
+        # state is exact; padded outputs are sliced off below.
+        pad = ((0, 0), (0, Sp - S), (0, 0))
+        dt = jnp.pad(dt, pad)
+        Bm = jnp.pad(Bm, pad)
+        Cm = jnp.pad(Cm, pad)
+        uf_s = jnp.pad(uf, pad)
+    else:
+        uf_s = uf
+    nch = Sp // chunk
+
+    def chunk_step(h0, xs):
+        dt_c, b_c, c_c, u_c = xs          # (B,chunk,I) / (B,chunk,N) ...
+        a = jnp.exp(dt_c[..., None] * A)                        # (B,c,I,N)
+        bx = (dt_c * u_c)[..., None] * b_c[:, :, None, :]       # (B,c,I,N)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        a_s, b_s = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        h = a_s * h0[:, None] + b_s                              # (B,c,I,N)
+        y = jnp.einsum("bcin,bcn->bci", h, c_c)
+        return h[:, -1], y
+
+    dt_ch = dt.reshape(B, nch, chunk, I).transpose(1, 0, 2, 3)
+    b_ch = Bm.reshape(B, nch, chunk, N).transpose(1, 0, 2, 3)
+    c_ch = Cm.reshape(B, nch, chunk, N).transpose(1, 0, 2, 3)
+    u_ch = uf_s.reshape(B, nch, chunk, I).transpose(1, 0, 2, 3)
+    h_init = jnp.zeros((B, I, N), jnp.float32)
+    h_last, ys = jax.lax.scan(chunk_step, h_init, (dt_ch, b_ch, c_ch, u_ch))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, Sp, I)[:, :S]
+    y = y + uf * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    state = {"h": h_last,
+             "conv": u_pre[:, S - (s.d_conv - 1):, :]}  # ring tail for decode
+    return y @ p["out_proj"], state
+
+
+def mamba_decode(cfg, p, x, state):
+    """x: (B, 1, D); state: {"h": (B,I,N) f32, "conv": (B, d_conv-1, I)}."""
+    s = cfg.ssm
+    B = x.shape[0]
+    xz = x @ p["in_proj"]
+    u_pre, z = jnp.split(xz, 2, axis=-1)                         # (B,1,I)
+    window = jnp.concatenate([state["conv"], u_pre], axis=1)     # (B,dc,I)
+    conv = jnp.einsum("bci,ci->bi", window.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(
+        jnp.float32)
+    u = jax.nn.silu(conv)[:, None, :].astype(x.dtype)            # (B,1,I)
+    dbc = u @ p["x_proj"]
+    dt_r, Bm, Cm = jnp.split(dbc, [s.dt_rank, s.dt_rank + s.d_state], axis=-1)
+    if s.extra_norms:
+        dt_r = rmsnorm(dt_r, p["dt_norm"])
+        Bm = rmsnorm(Bm, p["b_norm"])
+        Cm = rmsnorm(Cm, p["c_norm"])
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32)
+                         @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[:, 0, :, None] * A)                           # (B,I,N)
+    bx = (dt[:, 0] * u[:, 0].astype(jnp.float32))[..., None] \
+        * Bm[:, 0].astype(jnp.float32)[:, None, :]
+    h = a * state["h"] + bx
+    y = jnp.einsum("bin,bn->bi", h, Cm[:, 0].astype(jnp.float32))
+    y = y + u[:, 0].astype(jnp.float32) * p["D"]
+    y = (y[:, None, :].astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, {"h": h, "conv": window[:, 1:]}
+
+
+def mamba_init_state(cfg, batch: int):
+    s = cfg.ssm
+    I = s.expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, I, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, I), dtype_of(cfg)),
+    }

@@ -1,0 +1,564 @@
+"""Decoder assembly: embeds → scanned layer stacks → chunked LM loss / decode.
+
+Layer stacks are homogeneous scan units with weights stacked along a leading
+axis, so HLO size is depth-independent (critical for the 512-device dry-run
+compiles). Heterogeneous archs decompose into a few homogeneous stacks:
+
+  dense / moe / vlm / audio : one stack of (attn + ffn|moe) layers
+  deepseek (first_k_dense)  : unstacked dense layer 0 + stacked MoE layers
+  ssm                       : one stack of mamba layers
+  hybrid (recurrentgemma)   : stacked (rec, rec, attn) super-blocks + a
+                              stacked tail of leftover rec layers
+
+Each family provides (init / train / decode / init_cache) per scan unit; the
+generic drivers below thread residuals, MoE aux losses, and cache pytrees
+through ``lax.scan``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ffn as ffn_mod
+from . import rglru as rg
+from . import ssm as ssm_mod
+from .common import (apply_norm, dtype_of, embed_init, make_norm_params,
+                     sinusoidal_pos_emb)
+
+
+# ---------------------------------------------------------------------------
+# Per-family scan units
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg):
+    return attn.init_mla(key, cfg) if cfg.attn_type == "mla" \
+        else attn.init_gqa(key, cfg)
+
+
+def _attn_train(cfg, p, x, positions):
+    if cfg.attn_type == "mla":
+        out, kv = attn.mla_train(cfg, p, x, positions)
+    else:
+        out, kv = attn.gqa_train(cfg, p, x, positions,
+                                 window=cfg.sliding_window)
+    return out, kv
+
+
+def _attn_decode(cfg, p, x, pos, cache):
+    if cfg.attn_type == "mla":
+        return attn.mla_decode(cfg, p, x, pos, cache)
+    return attn.gqa_decode(cfg, p, x, pos, cache, window=cfg.sliding_window)
+
+
+def _attn_init_cache(cfg, batch, max_len):
+    if cfg.attn_type == "mla":
+        return attn.mla_init_cache(cfg, batch, max_len)
+    return attn.gqa_init_cache(cfg, batch, max_len)
+
+
+def _attn_cache_from_prefill(cfg, kv, max_len):
+    """Build a decode cache from prefill-produced full-sequence k/v."""
+    if cfg.attn_type == "mla":
+        c_kv, k_rope = kv
+        B, S = c_kv.shape[:2]
+        cache = attn.mla_init_cache(cfg, B, max_len)
+        cache["ckv"] = jax.lax.dynamic_update_slice(
+            cache["ckv"], c_kv, (0, 0, 0))
+        cache["krope"] = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope, (0, 0, 0))
+        cache["kpos"] = jax.lax.dynamic_update_slice(
+            cache["kpos"], jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                            (B, S)), (0, 0))
+        return cache
+    k, v = kv
+    B, S = k.shape[:2]
+    cache = attn.gqa_init_cache(cfg, B, max_len)
+    Sc = cache["k"].shape[1]
+    if S >= Sc:                      # keep the last window at ring slots
+        pos = jnp.arange(S - Sc, S, dtype=jnp.int32)
+        slots = pos % Sc
+        ck = jnp.zeros_like(cache["k"]).at[:, slots].set(k[:, -Sc:])
+        cv = jnp.zeros_like(cache["v"]).at[:, slots].set(v[:, -Sc:])
+        kpos = jnp.zeros((B, Sc), jnp.int32).at[:, slots].set(
+            jnp.broadcast_to(pos, (B, Sc)))
+        return {"k": ck, "v": cv, "kpos": kpos}
+    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+    cache["kpos"] = jax.lax.dynamic_update_slice(
+        cache["kpos"], jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                        (B, S)), (0, 0))
+    return cache
+
+
+# -- standard transformer layer (attn + ffn/moe) ----------------------------
+
+def init_tf_layer(key, cfg, moe: bool):
+    ks = jax.random.split(key, 4)
+    d_ff = cfg.d_ff
+    if cfg.moe is not None and not moe and cfg.moe.d_ff_dense:
+        d_ff = cfg.moe.d_ff_dense
+    return {
+        "ln1": make_norm_params(cfg, cfg.d_model),
+        "attn": _init_attn(ks[0], cfg),
+        "ln2": make_norm_params(cfg, cfg.d_model),
+        "ffn": (ffn_mod.init_moe(ks[1], cfg) if moe
+                else ffn_mod.init_dense_ffn(ks[2], cfg, d_ff)),
+    }
+
+
+def _sp_constraint(cfg, x):
+    if cfg.sp_attn and x.ndim == 3 and x.shape[1] > 1:
+        from jax.sharding import PartitionSpec as _P
+        return jax.lax.with_sharding_constraint(x, _P(None, "model", None))
+    return x
+
+
+def tf_layer_train(cfg, p, x, positions, moe: bool):
+    x = _sp_constraint(cfg, x)
+    a, kv = _attn_train(cfg, p["attn"], apply_norm(cfg, p["ln1"], x),
+                        positions)
+    x = x + a
+    h = apply_norm(cfg, p["ln2"], x)
+    if moe:
+        f, aux = ffn_mod.moe_ffn(cfg, p["ffn"], h)
+    else:
+        f, aux = ffn_mod.dense_ffn(cfg, p["ffn"], h), 0.0
+    return x + f, aux, kv
+
+
+def tf_layer_decode(cfg, p, x, pos, cache, moe: bool):
+    a, cache = _attn_decode(cfg, p["attn"], apply_norm(cfg, p["ln1"], x),
+                            pos, cache)
+    x = x + a
+    h = apply_norm(cfg, p["ln2"], x)
+    if moe:
+        f, _ = ffn_mod.moe_ffn(cfg, p["ffn"], h)
+    else:
+        f = ffn_mod.dense_ffn(cfg, p["ffn"], h)
+    return x + f, cache
+
+
+# -- mamba layer -------------------------------------------------------------
+
+def init_mamba_layer(key, cfg):
+    return {"ln": make_norm_params(cfg, cfg.d_model),
+            "mix": ssm_mod.init_mamba(key, cfg)}
+
+
+def mamba_layer_train(cfg, p, x, positions):
+    del positions
+    y, state = ssm_mod.mamba_train(cfg, p["mix"], apply_norm(cfg, p["ln"], x))
+    return x + y, 0.0, state
+
+
+def mamba_layer_decode(cfg, p, x, pos, state):
+    del pos
+    y, state = ssm_mod.mamba_decode(cfg, p["mix"], apply_norm(cfg, p["ln"], x),
+                                    state)
+    return x + y, state
+
+
+# -- hybrid (Griffin) super-block: rec, rec, attn, each + MLP ----------------
+
+def init_hybrid_sub(key, cfg, kind: str):
+    ks = jax.random.split(key, 2)
+    mix = rg.init_rglru(ks[0], cfg) if kind == "rec" else _init_attn(ks[0], cfg)
+    return {
+        "ln1": make_norm_params(cfg, cfg.d_model),
+        "mix": mix,
+        "ln2": make_norm_params(cfg, cfg.d_model),
+        "mlp": ffn_mod.init_dense_ffn(ks[1], cfg, cfg.d_ff),
+    }
+
+
+def hybrid_sub_train(cfg, p, x, positions, kind: str):
+    h = apply_norm(cfg, p["ln1"], x)
+    if kind == "rec":
+        y, kv = rg.rglru_train(cfg, p["mix"], h)
+    else:
+        y, kv = _attn_train(cfg, p["mix"], h, positions)
+    x = x + y
+    x = x + ffn_mod.dense_ffn(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+    return x, kv
+
+
+def hybrid_sub_decode(cfg, p, x, pos, cache, kind: str):
+    h = apply_norm(cfg, p["ln1"], x)
+    if kind == "rec":
+        y, cache = rg.rglru_decode(cfg, p["mix"], h, cache)
+    else:
+        y, cache = _attn_decode(cfg, p["mix"], h, pos, cache)
+    x = x + y
+    x = x + ffn_mod.dense_ffn(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Stack drivers
+# ---------------------------------------------------------------------------
+
+def _stacked_init(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def scan_stack_train(cfg, stack, x, positions, unit_train):
+    """unit_train(lp, x) -> (x, aux, cache_entry); caches returned stacked."""
+    body = unit_train
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    def step(carry, lp):
+        x, aux = carry
+        x, aux_i, kv = body(lp, x)
+        return (x, aux + aux_i), kv
+
+    (x, aux), kvs = jax.lax.scan(step, (x, 0.0), stack)
+    return x, aux, kvs
+
+
+def scan_stack_decode(stack, caches, x, unit_decode):
+    def step(x, xs):
+        lp, cache = xs
+        x, cache = unit_decode(lp, x, cache)
+        return x, cache
+
+    x, caches = jax.lax.scan(step, x, (stack, caches))
+    return x, caches
+
+
+# ---------------------------------------------------------------------------
+# Model: init / train / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _hybrid_layout(cfg):
+    pat = cfg.rglru.pattern
+    n_blocks = cfg.n_layers // len(pat)
+    tail = cfg.n_layers % len(pat)
+    assert all(k == "rec" for k in cfg.rglru.pattern[:tail]), \
+        "tail layers must be the leading (rec) prefix of the pattern"
+    return n_blocks, tail
+
+
+def init_params(cfg, key):
+    keys = jax.random.split(key, 8)
+    params = {"embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model,
+                                  dtype_of(cfg)),
+              "final_norm": make_norm_params(cfg, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        if cfg.frontend == "audio_frames":
+            params["heads"] = jax.vmap(
+                lambda k: embed_init(k, cfg.vocab_size, cfg.d_model,
+                                     dtype_of(cfg)).T)(
+                jax.random.split(keys[1], cfg.n_codebooks))
+        else:
+            params["lm_head"] = embed_init(keys[1], cfg.vocab_size,
+                                           cfg.d_model, dtype_of(cfg)).T
+    fam = cfg.family
+    if fam == "ssm":
+        params["stack"] = _stacked_init(
+            lambda k: init_mamba_layer(k, cfg), keys[2], cfg.n_layers)
+    elif cfg.rglru is not None:
+        n_blocks, tail = _hybrid_layout(cfg)
+        pat = cfg.rglru.pattern
+
+        def init_block(k):
+            sub = jax.random.split(k, len(pat))
+            return {f"sub{i}": init_hybrid_sub(sub[i], cfg, kind)
+                    for i, kind in enumerate(pat)}
+
+        params["blocks"] = _stacked_init(init_block, keys[2], n_blocks)
+        if tail:
+            params["tail"] = _stacked_init(
+                lambda k: init_hybrid_sub(k, cfg, "rec"), keys[3], tail)
+    elif cfg.moe is not None:
+        fk = cfg.moe.first_k_dense
+        if fk:
+            params["dense_head_layers"] = _stacked_init(
+                lambda k: init_tf_layer(k, cfg, moe=False), keys[3], fk)
+        params["stack"] = _stacked_init(
+            lambda k: init_tf_layer(k, cfg, moe=True), keys[2],
+            cfg.n_layers - fk)
+    else:
+        params["stack"] = _stacked_init(
+            lambda k: init_tf_layer(k, cfg, moe=False), keys[2], cfg.n_layers)
+    return params
+
+
+def embed_inputs(cfg, params, batch):
+    """Returns (x, positions, n_prefix) — n_prefix = non-text prefix length."""
+    if cfg.frontend == "audio_frames":
+        x = batch["frame_embeds"].astype(dtype_of(cfg))
+        S = x.shape[1]
+        pos = jnp.arange(S, dtype=jnp.int32)
+        x = x + sinusoidal_pos_emb(pos, cfg.d_model).astype(x.dtype)
+        return x, pos, 0
+    tok_emb = params["embed"][batch["tokens"]]
+    if cfg.frontend == "vision_patches":
+        patches = batch["patch_embeds"].astype(dtype_of(cfg))
+        x = jnp.concatenate([patches, tok_emb], axis=1)
+        n_prefix = patches.shape[1]
+    else:
+        x = tok_emb
+        n_prefix = 0
+    if cfg.pos_emb == "sinusoidal":
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        x = x + sinusoidal_pos_emb(pos, cfg.d_model).astype(x.dtype)
+    return x, jnp.arange(x.shape[1], dtype=jnp.int32), n_prefix
+
+
+def backbone_train(cfg, params, x, positions):
+    """Run all layer stacks; returns (hidden, aux_loss, caches-pytree)."""
+    caches = {}
+    aux = 0.0
+    if cfg.family == "ssm":
+        unit = lambda lp, h: mamba_layer_train(cfg, lp, h, positions)
+        x, aux, states = scan_stack_train(cfg, params["stack"], x, positions,
+                                          unit)
+        caches["stack"] = states
+    elif cfg.rglru is not None:
+        pat = cfg.rglru.pattern
+
+        def block_train(lp, h):
+            entries = {}
+            for i, kind in enumerate(pat):
+                h, kv = hybrid_sub_train(cfg, lp[f"sub{i}"], h, positions,
+                                         kind)
+                entries[f"sub{i}"] = kv
+            return h, 0.0, entries
+
+        x, _, kvs = scan_stack_train(cfg, params["blocks"], x, positions,
+                                     block_train)
+        caches["blocks"] = kvs
+        if "tail" in params:
+            def tail_unit(lp, h):
+                h, st = hybrid_sub_train(cfg, lp, h, positions, "rec")
+                return h, 0.0, st
+
+            x, _, tails = scan_stack_train(cfg, params["tail"], x, positions,
+                                           tail_unit)
+            caches["tail"] = tails
+    elif cfg.moe is not None:
+        if "dense_head_layers" in params:
+            unit = lambda lp, h: tf_layer_train(cfg, lp, h, positions,
+                                                moe=False)
+            x, aux0, kv0 = scan_stack_train(cfg, params["dense_head_layers"],
+                                            x, positions, unit)
+            aux += aux0
+            caches["dense_head"] = kv0
+        unit = lambda lp, h: tf_layer_train(cfg, lp, h, positions, moe=True)
+        x, aux1, kvs = scan_stack_train(cfg, params["stack"], x, positions,
+                                        unit)
+        aux += aux1
+        caches["stack"] = kvs
+    else:
+        unit = lambda lp, h: tf_layer_train(cfg, lp, h, positions, moe=False)
+        x, aux, kvs = scan_stack_train(cfg, params["stack"], x, positions,
+                                       unit)
+        caches["stack"] = kvs
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, aux, caches
+
+
+# ---------------------------------------------------------------------------
+# Loss (sequence-chunked cross entropy)
+# ---------------------------------------------------------------------------
+
+def _logits_chunk(cfg, params, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def lm_loss(cfg, params, h, labels, mask):
+    """h: (B,S,D); labels: (B,S) int32; mask: (B,S) {0,1}. Chunked over S."""
+    B, S, D = h.shape
+    chunk = min(cfg.loss_chunk, S)
+    while S % chunk:                     # e.g. vlm text span after the prefix
+        chunk //= 2
+    nch = S // chunk
+
+    def step(carry, xs):
+        hc, lc, mc = xs
+        logits = _logits_chunk(cfg, params, hc)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mc)), None
+
+    hs = h.reshape(B, nch, chunk, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nch, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(B, nch, chunk).transpose(1, 0, 2).astype(jnp.float32)
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def musicgen_loss(cfg, params, h, labels, mask):
+    """labels: (B,S,n_codebooks)."""
+    losses = []
+    for c in range(cfg.n_codebooks):
+        w = params["heads"][c]
+        logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                            w.astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., c:c + 1].astype(
+            jnp.int32), axis=-1)[..., 0]
+        losses.append(jnp.sum((lse - gold) * mask) / jnp.maximum(
+            jnp.sum(mask), 1.0))
+    return sum(losses) / len(losses)
+
+
+def loss_fn(cfg, params, batch):
+    """Full training objective. batch: tokens/labels/mask (+ modality)."""
+    x, positions, n_prefix = embed_inputs(cfg, params, batch)
+    h, aux, _ = backbone_train(cfg, params, x, positions)
+    if cfg.frontend == "audio_frames":
+        mask = batch.get("mask", jnp.ones(batch["labels"].shape[:2],
+                                          jnp.float32))
+        loss = musicgen_loss(cfg, params, h, batch["labels"], mask)
+    else:
+        if n_prefix:
+            h = h[:, n_prefix:]
+        labels = batch["labels"]
+        mask = batch.get("mask", jnp.ones(labels.shape, jnp.float32))
+        loss = lm_loss(cfg, params, h, labels, mask)
+    return loss + aux, {"ce_loss": loss, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: caches, prefill, single-token decode
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg, batch: int, max_len: int):
+    """Zero-initialized decode caches for every layer stack."""
+    caches = {}
+    if cfg.family == "ssm":
+        caches["stack"] = jax.vmap(
+            lambda _: ssm_mod.mamba_init_state(cfg, batch))(
+            jnp.arange(cfg.n_layers))
+    elif cfg.rglru is not None:
+        n_blocks, tail = _hybrid_layout(cfg)
+        pat = cfg.rglru.pattern
+
+        def one_block(_):
+            return {f"sub{i}": (rg.rglru_init_state(cfg, batch)
+                                if kind == "rec"
+                                else _attn_init_cache(cfg, batch, max_len))
+                    for i, kind in enumerate(pat)}
+
+        caches["blocks"] = jax.vmap(one_block)(jnp.arange(n_blocks))
+        if tail:
+            caches["tail"] = jax.vmap(
+                lambda _: rg.rglru_init_state(cfg, batch))(jnp.arange(tail))
+    elif cfg.moe is not None and cfg.moe.first_k_dense:
+        caches["dense_head"] = jax.vmap(
+            lambda _: _attn_init_cache(cfg, batch, max_len))(
+            jnp.arange(cfg.moe.first_k_dense))
+        caches["stack"] = jax.vmap(
+            lambda _: _attn_init_cache(cfg, batch, max_len))(
+            jnp.arange(cfg.n_layers - cfg.moe.first_k_dense))
+    else:
+        caches["stack"] = jax.vmap(
+            lambda _: _attn_init_cache(cfg, batch, max_len))(
+            jnp.arange(cfg.n_layers))
+    return caches
+
+
+def prefill(cfg, params, batch, max_cache_len: int):
+    """Process a prompt batch; returns (last-position logits, decode caches).
+
+    Recurrent states pass through as-is; attention k/v convert to (possibly
+    ring-windowed) decode caches, vmapped over the stacked layer axis.
+    """
+    x, positions, n_prefix = embed_inputs(cfg, params, batch)
+    h, _, raw = backbone_train(cfg, params, x, positions)
+
+    conv = jax.vmap(lambda kv: _attn_cache_from_prefill(cfg, kv,
+                                                        max_cache_len))
+    caches = {}
+    if cfg.family == "ssm":
+        caches["stack"] = raw["stack"]
+    elif cfg.rglru is not None:
+        pat = cfg.rglru.pattern
+        caches["blocks"] = {
+            f"sub{i}": (raw["blocks"][f"sub{i}"] if kind == "rec"
+                        else conv(raw["blocks"][f"sub{i}"]))
+            for i, kind in enumerate(pat)}
+        if "tail" in raw:
+            caches["tail"] = raw["tail"]
+    else:
+        if "dense_head" in raw:
+            caches["dense_head"] = conv(raw["dense_head"])
+        caches["stack"] = conv(raw["stack"])
+    if cfg.frontend == "audio_frames":
+        logits = jnp.einsum("bsd,cdv->bscv", h[:, -1:, :].astype(jnp.float32),
+                            params["heads"].astype(jnp.float32))
+    else:
+        logits = _logits_chunk(cfg, params, h[:, -1:, :])
+    return logits, caches
+
+
+def decode_step(cfg, params, token_inputs, pos, caches):
+    """One decode step at absolute position ``pos``.
+
+    token_inputs: {"tokens": (B,1)} or {"frame_embeds": (B,1,D)}.
+    Returns (logits (B,1,V or n_codebooks×V), new caches).
+    """
+    if cfg.frontend == "audio_frames":
+        x = token_inputs["frame_embeds"].astype(dtype_of(cfg))
+        x = x + sinusoidal_pos_emb(
+            jnp.full((1,), pos, jnp.int32), cfg.d_model).astype(x.dtype)
+    else:
+        x = params["embed"][token_inputs["tokens"]]
+        if cfg.pos_emb == "sinusoidal":
+            x = x + sinusoidal_pos_emb(
+                jnp.full((1,), pos, jnp.int32), cfg.d_model).astype(x.dtype)
+
+    new_caches = {}
+    if cfg.family == "ssm":
+        unit = lambda lp, h, c: mamba_layer_decode(cfg, lp, h, pos, c)
+        x, new_caches["stack"] = scan_stack_decode(
+            params["stack"], caches["stack"], x, unit)
+    elif cfg.rglru is not None:
+        pat = cfg.rglru.pattern
+
+        def block_decode(lp, h, c):
+            out_c = {}
+            for i, kind in enumerate(pat):
+                h, out_c[f"sub{i}"] = hybrid_sub_decode(
+                    cfg, lp[f"sub{i}"], h, pos, c[f"sub{i}"], kind)
+            return h, out_c
+
+        x, new_caches["blocks"] = scan_stack_decode(
+            params["blocks"], caches["blocks"], x, block_decode)
+        if "tail" in params:
+            unit = lambda lp, h, c: hybrid_sub_decode(cfg, lp, h, pos, c,
+                                                      "rec")
+            x, new_caches["tail"] = scan_stack_decode(
+                params["tail"], caches["tail"], x, unit)
+    else:
+        moe = cfg.moe is not None
+        if "dense_head" in caches:
+            unit = lambda lp, h, c: tf_layer_decode(cfg, lp, h, pos, c,
+                                                    moe=False)
+            x, new_caches["dense_head"] = scan_stack_decode(
+                params["dense_head_layers"], caches["dense_head"], x, unit)
+        unit = lambda lp, h, c: tf_layer_decode(cfg, lp, h, pos, c, moe=moe)
+        x, new_caches["stack"] = scan_stack_decode(
+            params["stack"], caches["stack"], x, unit)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    if cfg.frontend == "audio_frames":
+        logits = jnp.einsum("bsd,cdv->bscv", x.astype(jnp.float32),
+                            params["heads"].astype(jnp.float32))
+    else:
+        logits = _logits_chunk(cfg, params, x)
+    return logits, new_caches

@@ -1,0 +1,86 @@
+"""AdamW with decoupled weight decay, global-norm clipping and f32 moments.
+
+Non-float leaves (the PIM bit-plane int8 codes) are frozen: ``partition``
+splits the param tree into a trainable tree (None at frozen positions — an
+empty pytree, invisible to jax.grad) and a frozen tree; ``merge`` recombines.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def _is_trainable(leaf) -> bool:
+    dtype = getattr(leaf, "dtype", None) or jnp.asarray(leaf).dtype
+    return jnp.issubdtype(dtype, jnp.floating)
+
+
+def partition(params):
+    """→ (trainable_tree, frozen_tree); frozen positions are None in the
+    trainable tree and vice versa."""
+    train = jax.tree.map(lambda x: x if _is_trainable(x) else None, params)
+    frozen = jax.tree.map(lambda x: None if _is_trainable(x) else x, params)
+    return train, frozen
+
+
+def merge(train, frozen):
+    return jax.tree.map(
+        lambda t, f: t if f is None else f,
+        train, frozen,
+        is_leaf=lambda x: x is None)
+
+
+def init_state(train_params):
+    return {
+        "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                           train_params),
+        "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                           train_params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(train_params, grads, state, cfg: AdamWConfig,
+                  lr_scale: jax.Array | float = 1.0):
+    """Returns (new_train_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu = cfg.b1 * mu + (1.0 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1.0 - cfg.b2) * g * g
+        delta = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(train_params)
+    flat = [upd(p, g, m, n) for p, g, m, n in
+            zip(flat_p, jax.tree.leaves(grads),
+                jax.tree.leaves(state["mu"]), jax.tree.leaves(state["nu"]))]
+    new_params = treedef.unflatten([f[0] for f in flat])
+    new_state = {"mu": treedef.unflatten([f[1] for f in flat]),
+                 "nu": treedef.unflatten([f[2] for f in flat]),
+                 "step": step}
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,63 @@
+"""int8 error-feedback gradient compression for the cross-pod all-reduce.
+
+At multi-pod scale the pod-to-pod (DCN / optical) hop is the narrow link, so
+gradients crossing it are quantized to int8 with per-tensor scales and an
+error-feedback residual (Seide et al. / EF-SGD style):
+
+    q = round(g / s) clipped to int8,  s = max|g| / 127
+    residual' = g - q * s    (carried to the next step — unbiased over time)
+
+The compressed payload is 4x smaller than f32 (2x vs bf16). ``psum_compressed``
+wires this into a shard_map collective; with plain pjit the same trick applies
+at the gradient-tree level via compress/decompress around the reduction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g, residual=None):
+    """→ (codes int8, scale f32 scalar, new_residual)."""
+    gf = g.astype(jnp.float32)
+    if residual is not None:
+        gf = gf + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_residual = gf - codes.astype(jnp.float32) * scale
+    return codes, scale, new_residual
+
+
+def decompress(codes, scale):
+    return codes.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, residuals=None):
+    """Tree-wise compression; returns (codes_tree, scales_tree, residuals)."""
+    if residuals is None:
+        residuals = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                                 grads)
+    out = jax.tree.map(compress, grads, residuals)
+    codes = jax.tree.map(lambda o: o[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    scales = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return codes, scales, resid
+
+
+def decompress_tree(codes, scales):
+    return jax.tree.map(decompress, codes, scales)
+
+
+def psum_compressed(g, axis_name: str, residual=None):
+    """shard_map building block: int8-quantize, sum codes in int32 across the
+    axis, rescale. Scales are per-participant, so codes are pre-scaled to a
+    shared max before the reduction."""
+    codes, scale, new_residual = compress(g, residual)
+    # Use the max scale across the axis so summed codes share one scale.
+    smax = jax.lax.pmax(scale, axis_name)
+    rescaled = jnp.round(codes.astype(jnp.float32) * (scale / smax))
+    total = jax.lax.psum(rescaled.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * smax, new_residual

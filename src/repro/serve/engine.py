@@ -1,0 +1,52 @@
+"""Batched serving engine: prefill + jitted single-token decode loop.
+
+Greedy or temperature sampling over a batch of equal-length prompts (a
+production engine adds continuous batching on top; the step function here is
+exactly the unit the dry-run lowers as ``serve_step``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, prefill
+
+
+def greedy_generate(cfg, params, batch, *, max_new_tokens: int,
+                    max_cache_len: int | None = None, temperature: float = 0.0,
+                    key=None):
+    """batch: prompt inputs (see data.pipeline). Returns (B, max_new) tokens."""
+    prompt_len = (batch["frame_embeds"].shape[1]
+                  if cfg.frontend == "audio_frames"
+                  else batch["tokens"].shape[1]
+                  + (cfg.n_patches if cfg.frontend == "vision_patches" else 0))
+    max_cache_len = max_cache_len or (prompt_len + max_new_tokens)
+
+    logits, caches = prefill(cfg, params, batch, max_cache_len)
+
+    @functools.partial(jax.jit, static_argnums=())
+    def one_step(tok, pos, caches):
+        lg, caches = decode_step(cfg, params, {"tokens": tok}, pos, caches)
+        return lg, caches
+
+    def sample(lg, k):
+        lg = lg.reshape(lg.shape[0], -1)[:, :cfg.vocab_size]
+        if temperature <= 0.0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, lg / temperature).astype(jnp.int32)
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    toks = []
+    k0, key = jax.random.split(key)
+    tok = sample(logits, k0)[:, None]
+    toks.append(tok)
+    pos = prompt_len
+    for _ in range(max_new_tokens - 1):
+        logits, caches = one_step(tok, pos, caches)
+        k0, key = jax.random.split(key)
+        tok = sample(logits, k0)[:, None]
+        toks.append(tok)
+        pos += 1
+    return jnp.concatenate(toks, axis=1)

@@ -1,0 +1,112 @@
+"""The fault-tolerant training loop.
+
+Responsibilities: restore-or-init, host prefetch, jitted step, periodic +
+preemption checkpointing, NaN-skip accounting, straggler flagging, bounded
+retry on step failure. Pure orchestration — all math lives in step.py.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.ckpt import checkpoint
+from repro.data.pipeline import Prefetcher, make_batch
+from repro.models import init_params
+from repro.optim import adamw
+from repro.train import fault
+from repro.train.step import init_train_state, make_train_step
+
+
+def train_loop(cfg, *, steps: int, batch: int, seq: int,
+               opt_cfg=None, schedule_fn=None, ckpt_dir: str | None = None,
+               ckpt_every: int = 50, microbatches: int = 1,
+               compress: bool = False, seed: int = 0, log=print,
+               max_retries: int = 2):
+    """Returns (params, history dict)."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    schedule_fn = schedule_fn or (lambda s: 1.0)
+
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cfg, key)
+    train, frozen, opt = init_train_state(cfg, params, compress)
+    start = 0
+
+    if ckpt_dir:
+        os.makedirs(ckpt_dir, exist_ok=True)
+        last = checkpoint.latest_step(ckpt_dir)
+        if last is not None:
+            restored, manifest = checkpoint.restore(
+                ckpt_dir, last, {"train": train, "opt": opt})
+            train, opt = restored["train"], restored["opt"]
+            start = manifest["step"]
+            log(f"[ckpt] resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, schedule_fn,
+                                      microbatches, compress),
+                      donate_argnums=(0, 2))
+
+    prefetch = Prefetcher(
+        lambda s: make_batch(cfg, batch=batch, seq=seq, step=s, seed=seed),
+        start_step=start)
+    guard = fault.PreemptionGuard()
+    timer = fault.StepTimer()
+    history = {"loss": [], "step_time": [], "skipped": 0, "stragglers": 0,
+               "retries": 0}
+
+    def save(step):
+        if ckpt_dir:
+            checkpoint.save(ckpt_dir, step, {"train": train, "opt": opt},
+                            meta={"arch": cfg.arch_id, "seq": seq,
+                                  "batch": batch})
+
+    step = start
+    try:
+        while step < steps:
+            got_step, np_batch = prefetch.get()
+            assert got_step == step, (got_step, step)
+            batch_dev = jax.tree.map(jax.numpy.asarray, np_batch)
+
+            def run_one():
+                nonlocal train, opt
+                timer.start()
+                train, opt, metrics = step_fn(train, frozen, opt, batch_dev)
+                metrics = jax.device_get(metrics)
+                dt, straggler = timer.stop()
+                return metrics, dt, straggler
+
+            def recover(attempt):
+                nonlocal train, opt
+                history["retries"] += 1
+                if ckpt_dir and checkpoint.latest_step(ckpt_dir) is not None:
+                    last = checkpoint.latest_step(ckpt_dir)
+                    restored, _ = checkpoint.restore(
+                        ckpt_dir, last, {"train": train, "opt": opt})
+                    train, opt = restored["train"], restored["opt"]
+
+            metrics, dt, straggler = fault.with_retries(
+                run_one, recover, max_retries=max_retries, log=log)
+            history["loss"].append(float(metrics["loss"]))
+            history["step_time"].append(dt)
+            history["skipped"] += int(metrics["skipped"])
+            history["stragglers"] += int(straggler)
+            if straggler:
+                log(f"[straggler] step {step} took {dt:.2f}s "
+                    f"(ewma {timer.ewma:.2f}s)")
+            if step % 10 == 0:
+                log(f"step {step:5d} loss {metrics['loss']:.4f} "
+                    f"gnorm {metrics['grad_norm']:.3f} {dt*1e3:.0f} ms")
+            step += 1
+            if ckpt_dir and (step % ckpt_every == 0 or guard.requested):
+                save(step)
+            if guard.requested:
+                log(f"[preempt] SIGTERM at step {step}: saved and exiting")
+                break
+    finally:
+        prefetch.close()
+        guard.restore()
+    save(step)
+    params = adamw.merge(train, frozen)
+    return params, history

@@ -1,0 +1,145 @@
+"""In-DRAM SIMD arithmetic on horizontal data (adders, multiplier, GF, RS)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitplane import PimVM, arith, gf, layout, rs
+
+
+def make_vm(width=8, words=2, rows=96):
+    return PimVM(width=width, num_rows=rows, words=words)
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 256, 16)
+    row = layout.pack_elements(vals, 8, 4)
+    back = layout.unpack_elements(row, 8, 16)
+    assert np.array_equal(back, vals.astype(np.uint64))
+
+
+@pytest.mark.parametrize("adder", [arith.add_ripple, arith.add_kogge_stone])
+def test_adders(adder):
+    rng = np.random.default_rng(1)
+    vm = make_vm()
+    a = rng.integers(0, 256, vm.lanes)
+    b = rng.integers(0, 256, vm.lanes)
+    out = adder(vm, vm.load(a), vm.load(b))
+    assert np.array_equal(vm.read(out), arith.ref_add(a, b, 8))
+
+
+def test_kogge_stone_fewer_logic_rounds_more_shift_cost():
+    """§8.0.1: KS trades TRA depth for longer shifts; both must be exact."""
+    rng = np.random.default_rng(2)
+    vm1, vm2 = make_vm(), make_vm()
+    a = rng.integers(0, 256, vm1.lanes)
+    b = rng.integers(0, 256, vm1.lanes)
+    r1 = arith.add_ripple(vm1, vm1.load(a), vm1.load(b))
+    r2 = arith.add_kogge_stone(vm2, vm2.load(a), vm2.load(b))
+    assert np.array_equal(vm1.read(r1), vm2.read(r2))
+    assert vm1.counts()["n_shift"] != vm2.counts()["n_shift"]
+
+
+@given(st.lists(st.integers(0, 255), min_size=8, max_size=8),
+       st.lists(st.integers(0, 255), min_size=8, max_size=8))
+@settings(max_examples=5)
+def test_mul_shift_add_property(avals, bvals):
+    vm = make_vm(words=2)
+    a = np.array(avals, dtype=np.uint64)
+    b = np.array(bvals, dtype=np.uint64)
+    out = arith.mul_shift_add(vm, vm.load(a), vm.load(b))
+    assert np.array_equal(vm.read(out), arith.ref_mul(a, b, 8))
+
+
+def test_width4_arithmetic():
+    rng = np.random.default_rng(3)
+    vm = make_vm(width=4, words=2)
+    a = rng.integers(0, 16, vm.lanes)
+    b = rng.integers(0, 16, vm.lanes)
+    out = arith.add_ripple(vm, vm.load(a), vm.load(b))
+    assert np.array_equal(vm.read(out), arith.ref_add(a, b, 4))
+
+
+def test_xtime_and_gf_mul():
+    rng = np.random.default_rng(4)
+    vm = make_vm(words=2)
+    a = rng.integers(0, 256, vm.lanes)
+    b = rng.integers(0, 256, vm.lanes)
+    ra, rb = vm.load(a), vm.load(b)
+    assert np.array_equal(vm.read(gf.xtime(vm, ra)), gf.ref_xtime(a))
+    assert np.array_equal(vm.read(gf.gf_mul(vm, ra, rb)),
+                          gf.ref_gf_mul(a, b))
+
+
+def test_gf_mul_const_rs_field():
+    rng = np.random.default_rng(5)
+    vm = make_vm(words=2)
+    a = rng.integers(0, 256, vm.lanes)
+    got = vm.read(gf.gf_mul_const(vm, vm.load(a), 0x1D, poly=gf.RS_POLY))
+    ref = gf.ref_gf_mul(a, np.full_like(a, 0x1D), poly=gf.RS_POLY)
+    assert np.array_equal(got, ref)
+
+
+def test_aes_xtime_known_vectors():
+    vm = make_vm(words=2)
+    vals = np.array([0x57, 0x80, 0x01, 0xFF] * (vm.lanes // 4),
+                    dtype=np.uint64)
+    got = vm.read(gf.xtime(vm, vm.load(vals)))
+    assert got[0] == 0xAE          # FIPS-197 example: xtime(0x57)=0xAE
+    assert got[1] == 0x1B          # 0x80 → reduce
+    assert got[2] == 0x02
+
+
+def test_reed_solomon_encode_and_syndromes():
+    rng = np.random.default_rng(6)
+    k, npar = 5, 4
+    vm = PimVM(width=8, num_rows=120, words=1)
+    msg = rng.integers(0, 256, size=(k, vm.lanes))
+    regs = [vm.load(msg[i]) for i in range(k)]
+    par = rs.rs_encode(vm, regs, npar)
+    got = np.stack([vm.read(r) for r in par])
+    ref = rs.ref_rs_encode(msg, npar)
+    assert np.array_equal(got, ref)
+    cw = np.concatenate([msg.astype(np.uint64), ref[::-1]], axis=0)
+    assert not rs.ref_rs_syndromes(cw, npar).any()
+
+
+def test_rs_detects_corruption():
+    rng = np.random.default_rng(7)
+    k, npar = 5, 4
+    msg = rng.integers(0, 256, size=(k, 4)).astype(np.uint64)
+    par = rs.ref_rs_encode(msg, npar)
+    cw = np.concatenate([msg, par[::-1]], axis=0)
+    cw[2, 1] ^= 0x40
+    assert rs.ref_rs_syndromes(cw, npar).any()
+
+
+def test_costs_accumulate():
+    vm = make_vm(words=2)
+    rng = np.random.default_rng(8)
+    a = vm.load(rng.integers(0, 256, vm.lanes))
+    t0 = vm.time_ns
+    gf.xtime(vm, a)
+    assert vm.time_ns > t0
+    assert vm.counts()["n_shift"] >= 1        # xtime uses migration shifts
+
+
+def test_aes_mixcolumns_full_in_dram():
+    """FIPS-197 MixColumns on byte-lane columns — rotations via chained
+    migration shifts, scaling via xtime: the paper's §1/§8 AES pitch."""
+    rng = np.random.default_rng(9)
+    vm = make_vm(words=2, rows=96)
+    state = rng.integers(0, 256, (vm.lanes // 4, 4))
+    reg = vm.load(state.reshape(-1))
+    out = gf.mixcolumns(vm, reg)
+    got = vm.read(out).reshape(-1, 4)
+    assert np.array_equal(got, gf.ref_mixcolumns(state))
+    assert vm.counts()["n_shift"] > 0
+
+
+def test_aes_mixcolumns_fips_vector():
+    vm = make_vm(words=1, rows=96)
+    kv = np.array([[0xDB, 0x13, 0x53, 0x45]])
+    reg = vm.load(kv.reshape(-1))
+    got = vm.read(gf.mixcolumns(vm, reg)).reshape(-1, 4)
+    assert np.array_equal(got[0], [0x8E, 0x4D, 0xA1, 0xBC])

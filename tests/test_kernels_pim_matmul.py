@@ -1,0 +1,82 @@
+"""Bit-plane shift-and-add matmul kernel vs oracle: shape/dtype/mode sweep."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.pim_matmul import pim_matmul, quantize, ref
+
+
+def make(mkn, seed=0, x_dtype=jnp.bfloat16):
+    m, k, n = mkn
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), x_dtype)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    return x, w
+
+
+SHAPES = [(8, 128, 128), (16, 256, 128), (64, 512, 256), (128, 1024, 128)]
+
+
+@pytest.mark.parametrize("mkn", SHAPES)
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("mode", ["shift_add", "dequant"])
+def test_matmul_close_to_oracle(mkn, bits, mode):
+    x, w = make(mkn)
+    wi, sc = quantize(w, bits)
+    y = pim_matmul(x, wi, sc, mode=mode, bits=bits, bk=min(512, mkn[1]))
+    yref = ref.ref_pim_matmul(x, wi, sc, bits)
+    rel = float(jnp.max(jnp.abs(y - yref))
+                / (jnp.max(jnp.abs(yref)) + 1e-9))
+    assert rel < 2e-2, rel
+
+
+@pytest.mark.parametrize("x_dtype", [jnp.bfloat16, jnp.float32])
+def test_dtypes(x_dtype):
+    x, w = make((16, 256, 128), x_dtype=x_dtype)
+    wi, sc = quantize(w, 4)
+    y = pim_matmul(x, wi, sc, mode="shift_add", bits=4, bk=256)
+    yref = ref.ref_pim_matmul(x, wi, sc, 4)
+    assert float(jnp.max(jnp.abs(y - yref))) < 0.05 * float(
+        jnp.max(jnp.abs(yref)) + 1e-9)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_modes_agree(bits):
+    """shift_add and dequant are the same math — must agree tightly."""
+    x, w = make((32, 256, 128), seed=3)
+    wi, sc = quantize(w, bits)
+    y1 = pim_matmul(x, wi, sc, mode="shift_add", bits=bits, bk=256)
+    y2 = pim_matmul(x, wi, sc, mode="dequant", bits=bits, bk=256)
+    assert float(jnp.max(jnp.abs(y1 - y2))) < 1e-2 * float(
+        jnp.max(jnp.abs(y2)) + 1e-9)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_plane_decomposition_exact(bits):
+    """sum_b c_b·plane_b == w exactly (two's complement identity)."""
+    rng = np.random.default_rng(4)
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    w = jnp.asarray(rng.integers(lo, hi + 1, (64, 32)), jnp.int8)
+    acc = jnp.zeros((64, 32), jnp.float32)
+    for coeff, plane in zip(ref.plane_coeffs(bits), ref.ref_planes(w, bits)):
+        acc = acc + coeff * plane
+    assert jnp.array_equal(acc.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.normal(size=(256, 64)), jnp.float32)
+    wi, sc = quantize(w, 8)
+    wback = wi.astype(jnp.float32) * sc[None, :]
+    # max quantization error ≤ scale/2 per channel
+    err = jnp.max(jnp.abs(w - wback), axis=0)
+    assert bool(jnp.all(err <= sc * 0.5 + 1e-7))
+
+
+def test_block_shape_sweep():
+    x, w = make((128, 512, 256), seed=6)
+    wi, sc = quantize(w, 4)
+    base = pim_matmul(x, wi, sc, mode="dequant", bits=4)
+    for bm, bn, bk in [(64, 128, 256), (128, 64, 128), (32, 256, 512)]:
+        y = pim_matmul(x, wi, sc, mode="dequant", bits=4, bm=bm, bn=bn, bk=bk)
+        assert float(jnp.max(jnp.abs(y - base))) < 1e-3

@@ -1,0 +1,78 @@
+"""Timing/energy model vs the paper's NVMain Tables 2 & 3 (5% gate)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pim
+
+PAPER = {  # n_shifts: (total_ns, total_nj, active_nj)
+    1: (208.7, 31.321, 30.24),
+    50: (10_291.0, 1_592.52, 1_515.4),
+    100: (20_733.0, 3_223.6, 3_030.81),
+    512: (106_272.0, 16_554.6, 15_513.5),
+}
+
+
+@pytest.fixture(scope="module")
+def rows():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(0, 2**32, (2048,), dtype=np.uint32))
+
+
+@pytest.mark.parametrize("n", sorted(PAPER))
+def test_latency_within_5pct(rows, n):
+    s = pim.run_shift_workload(rows, n)
+    t_paper = PAPER[n][0]
+    assert float(s.meter.time_ns) == pytest.approx(t_paper, rel=0.05)
+
+
+@pytest.mark.parametrize("n", sorted(PAPER))
+def test_energy_within_5pct(rows, n):
+    s = pim.run_shift_workload(rows, n)
+    e_paper = PAPER[n][1]
+    assert float(s.meter.total_energy_nj) == pytest.approx(e_paper, rel=0.05)
+
+
+@pytest.mark.parametrize("n", sorted(PAPER))
+def test_active_energy_exact_model(rows, n):
+    """Active energy = 8 ACTs/shift × 3.78 nJ — the paper's dominant term."""
+    s = pim.run_shift_workload(rows, n)
+    assert float(s.meter.e_act) == pytest.approx(n * 30.24, rel=0.005)
+
+
+def test_burst_energy_zero_for_pim_workload(rows):
+    """Table 2: burst energy is zero — no data leaves the chip."""
+    s = pim.run_shift_workload(rows, 50)
+    assert float(s.meter.e_burst) == 0.0
+
+
+def test_energy_per_kb_about_4nj(rows):
+    s = pim.run_shift_workload(rows, 100)
+    per_kb = float(s.meter.total_energy_nj) / 100 / 8.0
+    assert 3.5 <= per_kb <= 4.5                      # paper: 3.915–4.041
+
+
+def test_refresh_overhead_grows_with_duration(rows):
+    fracs = []
+    for n in (1, 50, 512):
+        s = pim.run_shift_workload(rows, n)
+        fracs.append(float(s.meter.e_refresh)
+                     / float(s.meter.total_energy_nj))
+    assert fracs[0] == 0.0
+    assert fracs[0] < fracs[1] < fracs[2]
+    assert fracs[2] < 0.10                           # paper: 6.3%
+
+
+def test_static_estimate_matches_traced_run(rows):
+    est = pim.estimate_cost(n_shifts=100)
+    s = pim.run_shift_workload(rows, 100)
+    assert est["time_ns"] == pytest.approx(float(s.meter.time_ns), rel=0.01)
+    assert est["energy_nj"] == pytest.approx(
+        float(s.meter.total_energy_nj), rel=0.01)
+
+
+def test_cpu_movement_comparison():
+    """§5.1.5: conventional read+write of 8KB ≫ one in-DRAM shift."""
+    conventional = pim.cpu_movement_energy_nj(8192)
+    assert conventional >= 2_560.0                   # ≥ 2×128×10 nJ
+    assert conventional / 32.0 > 40                  # ≥40× reduction claim

@@ -1,0 +1,153 @@
+"""PIM ISA correctness: the paper's migration-cell shift + Ambit ops."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import pim
+
+WORDS = 8  # 256-bit rows keep python-int cross-checks fast
+
+
+def _rand_row(rng):
+    return jnp.asarray(rng.integers(0, 2**32, size=(WORDS,), dtype=np.uint32))
+
+
+def _row_to_int(row):
+    out = 0
+    for i, w in enumerate(np.asarray(row, dtype=np.uint32)):
+        out |= int(w) << (32 * i)
+    return out
+
+
+def _int_to_row(v):
+    return jnp.asarray([(v >> (32 * i)) & 0xFFFFFFFF for i in range(WORDS)],
+                       dtype=jnp.uint32)
+
+
+@pytest.fixture
+def state():
+    st_ = pim.make_subarray(32, WORDS)
+    return pim.reserve_control_rows(st_)
+
+
+def test_shift_right_matches_bigint(state):
+    rng = np.random.default_rng(0)
+    row = _rand_row(rng)
+    s = pim.write_row(state, 0, row)
+    s = pim.shift(s, 0, 1, +1)
+    expect = (_row_to_int(row) << 1) & ((1 << (32 * WORDS)) - 1)
+    assert _row_to_int(s.bits[1]) == expect
+
+
+def test_shift_left_matches_bigint(state):
+    rng = np.random.default_rng(1)
+    row = _rand_row(rng)
+    s = pim.write_row(state, 0, row)
+    s = pim.shift(s, 0, 1, -1)
+    assert _row_to_int(s.bits[1]) == _row_to_int(row) >> 1
+
+
+def test_shift_is_4_aaps(state):
+    s = pim.write_row(state, 0, jnp.ones((WORDS,), jnp.uint32))
+    n_aap0 = int(s.meter.n_aap)
+    s = pim.shift(s, 0, 1, +1)
+    assert int(s.meter.n_aap) - n_aap0 == 4          # paper §3.3
+    assert int(s.meter.n_shift) == 1
+
+
+def test_migration_rows_capture_parity(state):
+    """Fig. 3 mechanism: even columns go to mig_top, odd to mig_bot."""
+    rng = np.random.default_rng(2)
+    row = _rand_row(rng)
+    s = pim.write_row(state, 0, row)
+    s = pim.shift(s, 0, 1, +1)
+    even = np.asarray(row & pim.EVEN_MASK)
+    odd = np.asarray(row & pim.ODD_MASK)
+    assert np.array_equal(np.asarray(s.mig_top), even)
+    assert np.array_equal(np.asarray(s.mig_bot), odd)
+
+
+def test_rowclone_copies_and_preserves_src(state):
+    rng = np.random.default_rng(3)
+    row = _rand_row(rng)
+    s = pim.write_row(state, 3, row)
+    s = pim.rowclone(s, 3, 7)
+    assert np.array_equal(np.asarray(s.bits[7]), np.asarray(row))
+    assert np.array_equal(np.asarray(s.bits[3]), np.asarray(row))
+
+
+def test_tra_is_destructive_majority(state):
+    rng = np.random.default_rng(4)
+    a, b, c = (_rand_row(rng) for _ in range(3))
+    s = state
+    for i, r in enumerate((a, b, c)):
+        s = pim.write_row(s, i, r)
+    s = pim.tra(s, 0, 1, 2)
+    maj = np.asarray((a & b) | (b & c) | (a & c))
+    for i in range(3):                                # all three overwritten
+        assert np.array_equal(np.asarray(s.bits[i]), maj)
+
+
+def test_ambit_logic_ops(state):
+    rng = np.random.default_rng(5)
+    a, b = _rand_row(rng), _rand_row(rng)
+    s = pim.write_row(pim.write_row(state, 0, a), 1, b)
+    s = pim.ambit_and(s, 0, 1, 10)
+    s = pim.ambit_or(s, 0, 1, 11)
+    s = pim.ambit_xor(s, 0, 1, 12)
+    s = pim.ambit_not(s, 0, 13)
+    assert np.array_equal(np.asarray(s.bits[10]), np.asarray(a & b))
+    assert np.array_equal(np.asarray(s.bits[11]), np.asarray(a | b))
+    assert np.array_equal(np.asarray(s.bits[12]), np.asarray(a ^ b))
+    assert np.array_equal(np.asarray(s.bits[13]), np.asarray(~a))
+
+
+def test_surrounding_rows_preserved(state):
+    """Paper's LTSPICE criterion: rows not involved keep their values."""
+    rng = np.random.default_rng(6)
+    rows = [_rand_row(rng) for _ in range(4)]
+    s = state
+    for i, r in enumerate(rows):
+        s = pim.write_row(s, i, r)
+    s = pim.shift(s, 1, 2, +1)
+    assert np.array_equal(np.asarray(s.bits[0]), np.asarray(rows[0]))
+    assert np.array_equal(np.asarray(s.bits[1]), np.asarray(rows[1]))
+    assert np.array_equal(np.asarray(s.bits[3]), np.asarray(rows[3]))
+
+
+@given(st.integers(min_value=0, max_value=(1 << (32 * WORDS)) - 1),
+       st.integers(min_value=1, max_value=5))
+def test_shift_k_property(value, k):
+    """k right shifts == one k-column big-int shift (edge bits drop)."""
+    s = pim.reserve_control_rows(pim.make_subarray(16, WORDS))
+    s = pim.write_row(s, 0, _int_to_row(value))
+    s = pim.shift_k(s, 0, 1, k)
+    expect = (value << k) & ((1 << (32 * WORDS)) - 1)
+    assert _row_to_int(s.bits[1]) == expect
+
+
+@given(st.integers(min_value=0, max_value=(1 << (32 * WORDS)) - 1))
+def test_shift_round_trip_loses_only_edge(value):
+    s = pim.reserve_control_rows(pim.make_subarray(16, WORDS))
+    s = pim.write_row(s, 0, _int_to_row(value))
+    s = pim.shift(s, 0, 1, +1)
+    s = pim.shift(s, 1, 2, -1)
+    top_bit_cleared = value & ((1 << (32 * WORDS - 1)) - 1)
+    assert _row_to_int(s.bits[2]) == top_bit_cleared
+
+
+def test_bank_parallel_energy_and_wall_time():
+    """§5.1.4: N banks → same wall time, N× energy, N× throughput."""
+    def prog(row):
+        return pim.run_shift_workload(row, 4, num_rows=16, words=WORDS)
+
+    rng = np.random.default_rng(7)
+    rows = jnp.asarray(rng.integers(0, 2**32, size=(8, WORDS),
+                                    dtype=np.uint32))
+    states, wall_ns, energy = pim.bank_parallel(prog, 8)(rows)
+    single = prog(rows[0])
+    assert wall_ns == pytest.approx(float(single.meter.time_ns), rel=1e-6)
+    assert energy == pytest.approx(
+        8 * float(single.meter.total_energy_nj), rel=1e-5)

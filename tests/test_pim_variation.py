@@ -1,0 +1,40 @@
+"""Monte-Carlo process-variation model vs paper Table 4."""
+import jax
+import pytest
+
+from repro.core.pim import variation as V
+
+KEY = jax.random.PRNGKey(7)
+N = 40_000
+
+
+def rate(p):
+    return float(V.shift_failure_rate(KEY, p, n_trials=N))
+
+
+def test_zero_variation_never_fails():
+    assert rate(0.0) == 0.0
+
+
+def test_5pct_close_to_paper():
+    assert rate(5.0) == pytest.approx(0.005, abs=0.004)
+
+
+def test_10pct_close_to_paper():
+    assert rate(10.0) == pytest.approx(0.14, abs=0.04)
+
+
+def test_20pct_close_to_paper():
+    assert rate(20.0) == pytest.approx(0.30, abs=0.06)
+
+
+def test_failure_rate_monotone_in_variation():
+    rates = [rate(p) for p in (0.0, 5.0, 10.0, 20.0)]
+    assert all(a < b for a, b in zip(rates, rates[1:]))
+
+
+def test_nominal_margin_positive():
+    """Charge-sharing physics: ~100 mV swing ≫ 55 mV requirement at 22nm."""
+    import jax.numpy as jnp
+    m = V._sense_margin(jnp.zeros((1, 1, 5)), V.TECH22)
+    assert 0.03 < float(m[0, 0]) < 0.08

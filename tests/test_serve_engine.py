@@ -1,0 +1,55 @@
+"""Serving engine behaviours beyond the system test."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve.engine import greedy_generate
+
+from util import make_inputs
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-4b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_temperature_sampling_differs_but_valid(setup):
+    cfg, params = setup
+    prompts = make_inputs(cfg, 2, 16, labels=False)
+    greedy = greedy_generate(cfg, params, prompts, max_new_tokens=12)
+    hot = greedy_generate(cfg, params, prompts, max_new_tokens=12,
+                          temperature=1.5, key=jax.random.PRNGKey(7))
+    assert hot.shape == greedy.shape
+    assert int(hot.max()) < cfg.vocab_size and int(hot.min()) >= 0
+    assert not jnp.array_equal(greedy, hot)
+
+
+def test_batch_requests_independent(setup):
+    """Request i's output must not depend on what else is in the batch."""
+    cfg, params = setup
+    prompts = make_inputs(cfg, 3, 16, labels=False)
+    full = greedy_generate(cfg, params, prompts, max_new_tokens=6)
+    solo = greedy_generate(
+        cfg, params, {"tokens": prompts["tokens"][1:2]}, max_new_tokens=6)
+    assert jnp.array_equal(full[1:2], solo)
+
+
+def test_generate_respects_cache_budget(setup):
+    cfg, params = setup
+    prompts = make_inputs(cfg, 1, 8, labels=False)
+    out = greedy_generate(cfg, params, prompts, max_new_tokens=4,
+                          max_cache_len=16)
+    assert out.shape == (1, 4)
+
+
+def test_ssm_arch_generates():
+    cfg = get_config("falcon-mamba-7b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    prompts = make_inputs(cfg, 2, 12, labels=False)
+    out = greedy_generate(cfg, params, prompts, max_new_tokens=5)
+    assert out.shape == (2, 5)
+    assert int(out.max()) < cfg.vocab_size

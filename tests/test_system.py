@@ -1,0 +1,89 @@
+"""End-to-end behaviour tests: the paper's pipeline + the LM framework."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, applicable, get_config, skip_reason
+from repro.models import init_params
+from repro.serve.engine import greedy_generate
+
+from util import make_inputs
+
+
+def test_full_pim_pipeline_shift_then_crypto():
+    """The paper's promise end to end: horizontal data, shifted in-DRAM,
+    fed to GF arithmetic — no transposition anywhere, costs accounted."""
+    from repro.core.bitplane import PimVM, gf
+    vm = PimVM(width=8, num_rows=64, words=4)
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 256, vm.lanes)
+    reg = vm.load(data)
+    shifted = vm.shift_elem(reg, +1)            # in-lane shift via mig cells
+    x2 = gf.xtime(vm, reg)                       # GF(2^8) multiply-by-x
+    assert np.array_equal(vm.read(shifted),
+                          (data.astype(np.uint64) << np.uint64(1))
+                          & np.uint64(0xFF))
+    assert np.array_equal(vm.read(x2), gf.ref_xtime(data))
+    assert vm.counts()["n_shift"] > 0
+    assert vm.energy_nj > 0 and vm.time_ns > 0
+
+
+def test_generate_deterministic_and_plausible():
+    cfg = get_config("qwen3-4b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = make_inputs(cfg, 2, 16, labels=False)
+    out1 = greedy_generate(cfg, params, prompts, max_new_tokens=8)
+    out2 = greedy_generate(cfg, params, prompts, max_new_tokens=8)
+    assert out1.shape == (2, 8)
+    assert jnp.array_equal(out1, out2)
+    assert int(out1.max()) < cfg.vocab_size
+
+
+def test_applicability_matrix_covers_40_cells():
+    from repro.configs import ARCH_IDS
+    cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    assert len(cells) == 40
+    skips = [c for c in cells if not applicable(*c)]
+    assert len(skips) == 6                       # DESIGN.md §5
+    assert all(s == "long_500k" for _, s in skips)
+    assert all(skip_reason(a, s) for a, s in skips)
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_subprocess():
+    """Deliverable (e) in miniature: fresh process, 8 placeholder devices,
+    lower+compile a smoke arch through the real dryrun machinery."""
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, {src!r})
+import dataclasses
+import jax
+from repro.configs import get_config, SHAPES
+from repro.launch.dryrun import build_cell
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = get_config("qwen3-4b", smoke=True)
+shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64, global_batch=8)
+with mesh:
+    fn, args, report, acct = build_cell(cfg, shape, mesh)
+    compiled = fn.lower(*args).compile()
+    print("OK", compiled.memory_analysis().temp_size_in_bytes)
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=420)
+    assert "OK" in r.stdout, r.stderr[-2000:]
+
+
+def test_production_mesh_builders_are_lazy():
+    """Importing mesh.py must not initialize jax devices; shapes per spec."""
+    import inspect
+    from repro.launch import mesh as mesh_mod
+    src = inspect.getsource(mesh_mod)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src and '"pod"' in src

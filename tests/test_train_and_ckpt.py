@@ -1,0 +1,126 @@
+"""Training loop, NaN guard, microbatching, checkpoint/resume, compression."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint
+from repro.configs import get_config
+from repro.models import init_params, loss_fn
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+from repro.train.loop import train_loop
+from repro.train.step import init_train_state, make_train_step
+
+from util import make_inputs
+
+CFG = get_config("qwen3-4b", smoke=True)
+
+
+def test_loss_decreases():
+    params, hist = train_loop(CFG, steps=20, batch=8, seq=64,
+                              opt_cfg=adamw.AdamWConfig(lr=1e-3),
+                              log=lambda *a: None)
+    assert np.mean(hist["loss"][-5:]) < np.mean(hist["loss"][:5])
+    assert hist["skipped"] == 0
+
+
+def test_checkpoint_resume_continues_exactly():
+    with tempfile.TemporaryDirectory() as d:
+        train_loop(CFG, steps=10, batch=4, seq=32, ckpt_dir=d,
+                   ckpt_every=5, log=lambda *a: None)
+        assert checkpoint.latest_step(d) == 10
+        _, hist2 = train_loop(CFG, steps=14, batch=4, seq=32, ckpt_dir=d,
+                              ckpt_every=5, log=lambda *a: None)
+        assert len(hist2["loss"]) == 4       # resumed at step 10
+
+
+def test_resume_matches_uninterrupted_run():
+    """Fault-tolerance invariant: crash+restore == never crashed."""
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        train_loop(CFG, steps=8, batch=4, seq=32, ckpt_dir=d1,
+                   ckpt_every=4, log=lambda *a: None)
+        p_once, _ = train_loop(CFG, steps=8, batch=4, seq=32, ckpt_dir=d2,
+                               ckpt_every=8, log=lambda *a: None)
+        # run 1: interrupted at 4 (retention keeps step 4), resume to 8
+        p_resumed, _ = train_loop(CFG, steps=8, batch=4, seq=32, ckpt_dir=d1,
+                                  ckpt_every=4, log=lambda *a: None)
+        for a, b in zip(jax.tree.leaves(p_once), jax.tree.leaves(p_resumed)):
+            assert jnp.array_equal(a, b)
+
+
+def test_nan_guard_skips_poisoned_step():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    train, frozen, opt = init_train_state(CFG, params)
+    step = jax.jit(make_train_step(CFG, adamw.AdamWConfig(), lambda s: 1.0))
+    batch = make_inputs(CFG, 4, 32)
+    batch = dict(batch, mask=jnp.ones_like(batch["labels"], jnp.float32))
+    poisoned = dict(batch)
+    if "tokens" in poisoned:
+        poisoned["mask"] = batch["mask"] * jnp.float32("nan")
+    t1, o1, m1 = step(train, frozen, opt, poisoned)
+    assert float(m1["skipped"]) == 1.0
+    for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(train)):
+        assert jnp.array_equal(a, b)          # params unchanged
+    t2, o2, m2 = step(train, frozen, opt, batch)
+    assert float(m2["skipped"]) == 0.0
+
+
+def test_microbatching_matches_full_batch():
+    params = init_params(CFG, jax.random.PRNGKey(1))
+    train, frozen, opt = init_train_state(CFG, params)
+    batch = make_inputs(CFG, 8, 32)
+    s1 = jax.jit(make_train_step(CFG, adamw.AdamWConfig(lr=1e-2),
+                                 lambda s: 1.0, microbatches=1))
+    s2 = jax.jit(make_train_step(CFG, adamw.AdamWConfig(lr=1e-2),
+                                 lambda s: 1.0, microbatches=2))
+    p1, _, m1 = s1(train, frozen, opt, batch)
+    p2, _, m2 = s2(train, frozen, opt, batch)
+    # losses equal up to accumulation order
+    assert float(jnp.abs(m1["loss"] - m2["loss"])) < 5e-3
+    diffs = [float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32))))
+             for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2))]
+    assert max(diffs) < 5e-2
+
+
+def test_grad_compression_error_feedback():
+    from repro.optim import grad_compress as gc
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    codes, scale, resid = gc.compress(g)
+    back = gc.decompress(codes, scale)
+    assert float(jnp.max(jnp.abs(back - g))) <= float(scale) * 0.5 + 1e-7
+    # error feedback: residual carries exactly the rounding error
+    assert float(jnp.max(jnp.abs((back + resid) - g))) < 1e-6
+
+
+def test_lr_schedule_shape():
+    s = [float(warmup_cosine(i, warmup_steps=10, total_steps=100))
+         for i in (0, 5, 10, 50, 100)]
+    assert s[0] == 0.0 and s[1] == pytest.approx(0.5)
+    assert s[2] == pytest.approx(1.0)
+    assert s[2] > s[3] > s[4] >= 0.1 - 1e-6
+
+
+def test_checkpoint_atomicity_ignores_tmp(tmp_path):
+    d = str(tmp_path)
+    params = {"a": jnp.arange(4.0)}
+    checkpoint.save(d, 1, params)
+    os.makedirs(os.path.join(d, "step_00000002.tmp.999"), exist_ok=True)
+    assert checkpoint.latest_step(d) == 1
+    restored, _ = checkpoint.restore(d, 1, params)
+    assert jnp.array_equal(restored["a"], params["a"])
+
+
+def test_checkpoint_retention(tmp_path):
+    d = str(tmp_path)
+    for s in range(1, 6):
+        checkpoint.save(d, s, {"x": jnp.ones(2) * s}, keep=2)
+    steps = [f for f in os.listdir(d) if f.startswith("step_")]
+    assert len(steps) == 2
+    assert checkpoint.latest_step(d) == 5

@@ -1,0 +1,45 @@
+"""Shared test helpers: batch construction per modality."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_inputs(cfg, batch, seq, seed=0, labels=True):
+    rng = np.random.default_rng(seed)
+    if cfg.frontend == "audio_frames":
+        out = {"frame_embeds": jnp.asarray(
+            rng.normal(size=(batch, seq, cfg.d_model)), jnp.float32)}
+        if labels:
+            out["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size,
+                             (batch, seq, cfg.n_codebooks)), jnp.int32)
+        return out
+    if cfg.frontend == "vision_patches":
+        text = seq - cfg.n_patches
+        out = {
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (batch, text)), jnp.int32),
+            "patch_embeds": jnp.asarray(
+                rng.normal(size=(batch, cfg.n_patches, cfg.d_model)),
+                jnp.float32),
+        }
+        if labels:
+            out["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (batch, text)), jnp.int32)
+        return out
+    out = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32)}
+    if labels:
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32)
+    return out
+
+
+def split_last(batch, cfg):
+    """(prefix inputs, final-token inputs) for decode-consistency tests."""
+    if cfg.frontend == "audio_frames":
+        emb = batch["frame_embeds"]
+        return ({"frame_embeds": emb[:, :-1]},
+                {"frame_embeds": emb[:, -1:]})
+    pre = {k: v for k, v in batch.items() if k != "labels"}
+    pre = dict(pre, tokens=batch["tokens"][:, :-1])
+    return pre, {"tokens": batch["tokens"][:, -1:]}
