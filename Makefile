@@ -1,0 +1,23 @@
+# Offline-safe dev targets (no network, no extra installs).
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke lint
+
+# Tier-1 verify (ROADMAP.md). Hypothesis is optional; the suite runs
+# deterministic fallback examples when it is absent.
+test:
+	$(PYTHON) -m pytest -x -q
+
+# Kernel micro-bench in interpret mode + eager-vs-compiled executor
+# comparison; writes the bench-trajectory JSON next to the repo.
+bench-smoke:
+	$(PYTHON) -m benchmarks.kernel_bench kernel_bench.json
+	$(PYTHON) -m benchmarks.trace_replay
+
+# Syntax/bytecode check everywhere; upgrade to pyflakes when present.
+lint:
+	$(PYTHON) -m compileall -q src tests benchmarks examples
+	@$(PYTHON) -c "import pyflakes" 2>/dev/null \
+	  && $(PYTHON) -m pyflakes src tests benchmarks examples \
+	  || echo "pyflakes not installed - compileall syntax check only"

@@ -1,16 +1,96 @@
 """Pallas kernel micro-bench: wall time (interpret mode on CPU — correctness
-executor, NOT TPU perf) + fused-vs-composed HBM-traffic accounting."""
+executor, NOT TPU perf) + fused-vs-composed HBM-traffic accounting, plus
+eager-ISA vs compiled-executor wall time and cost-pass speedup for the
+Table 2/3 shift workload (JSON emitted for the bench trajectory)."""
+import json
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import pim
+from repro.core.pim import isa
 from repro.kernels.pim_matmul import pim_matmul, quantize
 from repro.kernels.rowops import bitwise, ripple_add, shift_cols
 
 from .common import timed
 
+TABLE23_SHIFTS = 1000     # the acceptance workload: N chained 1-bit shifts
 
-def run(report=print):
+
+def _eager_shift_workload(row, n_shifts, num_rows=64, words=2048):
+    """The pre-IR path: one Python-level state transition per command."""
+    s = pim.reserve_control_rows(pim.make_subarray(num_rows, words))
+    s = pim.SubarrayState(bits=s.bits.at[0].set(row), mig_top=s.mig_top,
+                          mig_bot=s.mig_bot, dcc=s.dcc, meter=s.meter)
+    s = isa.issue(s)
+    s = isa.shift(s, 0, 1, +1)
+    for _ in range(n_shifts - 1):
+        s = isa.shift(s, 1, 1, +1)
+    return pim.SubarrayState(bits=s.bits, mig_top=s.mig_top,
+                             mig_bot=s.mig_bot, dcc=s.dcc,
+                             meter=pim.apply_refresh(s.meter))
+
+
+def bench_compiled_vs_eager(n_shifts=TABLE23_SHIFTS, words=2048,
+                            report=print):
+    """Eager interpreter loop vs recorded-program executor on the Table 2/3
+    workload; returns (csv_rows, json_dict)."""
+    rng = np.random.default_rng(0)
+    num_rows = 64
+    row = jnp.asarray(rng.integers(0, 2**32, (words,), dtype=np.uint32))
+
+    t0 = time.perf_counter()
+    s_eager = _eager_shift_workload(row, n_shifts, num_rows, words)
+    jax.block_until_ready(s_eager.bits)
+    eager_us = (time.perf_counter() - t0) * 1e6
+
+    prog = pim.shift_workload_program(n_shifts, num_rows, words)
+    compiled = pim.compile_program(prog)
+    _, compiled_us = timed(
+        lambda: pim.execute(compiled, refresh=True).state.bits)
+
+    # cost pass alone (meter without stepping the state pytree per command)
+    t0 = time.perf_counter()
+    meter = pim.cost_pass(prog)
+    jax.block_until_ready(meter.time_ns)
+    cost_first_us = (time.perf_counter() - t0) * 1e6
+    _, cost_us = timed(lambda: pim.cost_pass(prog).time_ns)
+    summary = pim.cost_summary(prog, refresh=True)
+
+    exact = (float(s_eager.meter.time_ns)
+             == float(pim.run_shift_workload(row, n_shifts, num_rows,
+                                             words).meter.time_ns))
+    result = {
+        "workload": f"table23_shift_n{n_shifts}",
+        "n_shifts": n_shifts,
+        "eager_us": eager_us,
+        "compiled_us": compiled_us,
+        "speedup": eager_us / compiled_us,
+        "cost_pass_us": cost_us,
+        "cost_pass_first_us": cost_first_us,
+        "cost_pass_speedup": eager_us / cost_us,
+        "model_time_ns": summary["time_ns"],
+        "model_energy_nj": summary["energy_nj"],
+        "meter_bit_exact": exact,
+    }
+    report(f"eager ISA loop      : {eager_us:12.1f} us  (n={n_shifts})")
+    report(f"compiled executor   : {compiled_us:12.1f} us  "
+           f"({result['speedup']:.1f}x)")
+    report(f"cost pass only      : {cost_us:12.1f} us  "
+           f"({result['cost_pass_speedup']:.1f}x, bit-exact={exact})")
+    rows = [
+        (f"pim_eager_shift_n{n_shifts}", eager_us, "eager"),
+        (f"pim_compiled_shift_n{n_shifts}", compiled_us,
+         f"speedup={result['speedup']:.1f}x"),
+        (f"pim_cost_pass_n{n_shifts}", cost_us,
+         f"speedup={result['cost_pass_speedup']:.1f}x"),
+    ]
+    return rows, result
+
+
+def run(report=print, json_path=None):
     rng = np.random.default_rng(0)
     rows_out = []
     a = jnp.asarray(rng.integers(0, 2**32, (64, 2048), dtype=np.uint32))
@@ -43,10 +123,22 @@ def run(report=print):
     # MXU flop ratio between the modes (the dry-run measures it for real).
     report("pim_matmul shift_add does 4 plane-dots per tile vs 1 for "
            "dequant → 4x MXU flops (w4), traded for no dequant step")
+
+    cmp_rows, cmp_json = bench_compiled_vs_eager(report=report)
+    rows_out.extend(cmp_rows)
+    blob = json.dumps(cmp_json, indent=2, sort_keys=True)
+    if json_path:
+        with open(json_path, "w") as f:
+            f.write(blob + "\n")
+        report(f"wrote {json_path}")
+    else:
+        report(blob)
+
     for name, us, derived in rows_out:
         report(f"{name:42s} {us:12.1f} us  {derived}")
     return rows_out
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+    run(json_path=sys.argv[1] if len(sys.argv) > 1 else None)

@@ -1,0 +1,65 @@
+"""Replay an external PIM command trace through the compiling executor.
+
+Accepts the repo's ``pim-trace v1`` text format (HBM-PIMulator-style: one
+command per line, ``#``/``//`` comments, optional ``PIM`` prefix — see
+DESIGN.md §6). Prints the analytical cost summary and the executed meter,
+and optionally re-exports the parsed program (round-trip check).
+
+    PYTHONPATH=src python -m benchmarks.trace_replay TRACE [--out TRACE2]
+
+With no argument, replays the recorded Table 2/3 workload (N=1000) as a
+self-check.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core import pim
+
+
+def replay(trace_path: str | None, out_path: str | None = None,
+           report=print):
+    if trace_path is None:
+        prog = pim.shift_workload_program(1000, 64, 2048)
+        report("no trace given — replaying the recorded Table 2/3 workload "
+               f"(N=1000, {len(prog)} commands)")
+    else:
+        prog = pim.PimProgram.load_trace(trace_path)
+        report(f"loaded {trace_path}: {len(prog)} commands, "
+               f"{prog.num_rows} rows x {prog.words} words")
+    report(f"opcode histogram: {prog.counts()}")
+
+    summary = pim.cost_summary(prog, refresh=True)
+    res = pim.execute(prog, refresh=True)
+    meter = res.state.meter
+    out = {
+        "n_commands": len(prog),
+        "summary_time_ns": summary["time_ns"],
+        "summary_energy_nj": summary["energy_nj"],
+        "meter_time_ns": float(meter.time_ns),
+        "meter_energy_nj": float(meter.total_energy_nj),
+        "n_reads": len(res.reads),
+    }
+    report(json.dumps(out, indent=2, sort_keys=True))
+
+    if out_path:
+        prog.save_trace(out_path)
+        rt = pim.PimProgram.load_trace(out_path)
+        assert rt.ops == prog.ops, "trace round-trip mismatch"
+        report(f"wrote {out_path} (round-trip verified)")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", nargs="?", default=None,
+                    help="pim-trace v1 file to replay")
+    ap.add_argument("--out", default=None,
+                    help="re-export the parsed program to this path")
+    args = ap.parse_args()
+    replay(args.trace, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,20 +1,26 @@
 """A row-register virtual machine over one PIM subarray.
 
-Thin convenience layer: registers are row indices, every method is one or a
-few ISA commands, and the DDR3 cost meter advances underneath. Programs are
-built eagerly in Python (this is the *programming model* layer; the Pallas
-``kernels/rowops`` path is the performance path for bulk execution).
+Thin convenience layer: registers are row indices and every method records
+one or a few IR commands into a :class:`~..pim.ir.ProgramBuilder`. The
+recorded stream is flushed through the compiling executor
+(``pim/compile.py`` + ``pim/exec.py``) whenever a host-visible value is
+needed (``read``/accounting) — so long op sequences run kernel-fused with a
+one-fold cost pass instead of one Python-level pytree transition per
+command, while staying bit- and meter-exact against the old eager path.
 
 Element width ``w`` fixes the horizontal layout; mask/constant rows are
 host-written once per pattern and cached (setup cost is charged via
 ``write_row`` like any other host traffic, and reported separately by
-``setup_energy_nj``).
+``setup_energy_nj``). ``PimVM(..., eager=True)`` keeps the old
+command-at-a-time execution via the ``isa`` shim.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from ..pim import isa
+from ..pim import exec as pim_exec
+from ..pim.ir import ProgramBuilder
 from ..pim.state import SubarrayState, make_subarray
 from ..pim.timing import DDR3Timing, DEFAULT_TIMING
 from . import layout
@@ -24,17 +30,40 @@ class PimVM:
     RESERVED_TAIL = 8  # C0/C1/T0..T3 + margin
 
     def __init__(self, width: int, num_rows: int = 128, words: int = 16,
-                 cfg: DDR3Timing = DEFAULT_TIMING):
+                 cfg: DDR3Timing = DEFAULT_TIMING, eager: bool = False):
         assert (words * 32) % width == 0
         self.width = width
         self.words = words
         self.cfg = cfg
+        self.eager = eager
         self.lanes = (words * 32) // width
         st = make_subarray(num_rows, words)
         self.state: SubarrayState = isa.reserve_control_rows(st)
+        self._num_rows = num_rows
+        self._builder = ProgramBuilder(num_rows, words)
+        self._reads: tuple = ()
         self._free = list(range(num_rows - self.RESERVED_TAIL - 1, -1, -1))
         self._mask_rows: dict[int, int] = {}
         self._setup_energy_marker = 0.0
+
+    # -- recording / flushing --------------------------------------------------
+    def _op(self, name: str, *args) -> None:
+        """Dispatch one ISA-surface call: eager shim or IR recording.
+        ProgramBuilder mirrors isa minus the threaded state/cfg, so the
+        same name and operand order serve both paths."""
+        if self.eager:
+            self.state = getattr(isa, name)(self.state, *args, self.cfg)
+        else:
+            getattr(self._builder, name)(*args)
+
+    def _flush(self) -> None:
+        """Execute the pending recorded stream against the current state."""
+        if len(self._builder) == 0:
+            return
+        res = pim_exec.execute(self._builder.build(), self.state, self.cfg)
+        self.state = res.state
+        self._reads = res.reads
+        self._builder = ProgramBuilder(self._num_rows, self.words)
 
     # -- register management -------------------------------------------------
     def alloc(self) -> int:
@@ -47,11 +76,16 @@ class PimVM:
     def load(self, values, reg: int | None = None) -> int:
         reg = self.alloc() if reg is None else reg
         row = layout.pack_elements(np.asarray(values), self.width, self.words)
-        self.state = isa.write_row(self.state, reg, row, self.cfg)
+        self._op("write_row", reg, np.asarray(row))
         return reg
 
     def read(self, reg: int) -> np.ndarray:
-        self.state, row = isa.read_row(self.state, reg, self.cfg)
+        if self.eager:
+            self.state, row = isa.read_row(self.state, reg, self.cfg)
+        else:
+            slot = self._builder.read_row(reg)
+            self._flush()
+            row = self._reads[slot]
         return layout.unpack_elements(row, self.width, self.lanes)
 
     def mask(self, element_pattern: int) -> int:
@@ -59,56 +93,59 @@ class PimVM:
         if element_pattern not in self._mask_rows:
             reg = self.alloc()
             row = layout.const_row(self.width, self.words, element_pattern)
-            self.state = isa.write_row(self.state, reg, row, self.cfg)
+            self._op("write_row", reg, np.asarray(row))
             self._mask_rows[element_pattern] = reg
         return self._mask_rows[element_pattern]
 
     # -- ISA ops (dst allocated when omitted; returns dst) --------------------
     def copy(self, a: int, dst: int | None = None) -> int:
         dst = self.alloc() if dst is None else dst
-        self.state = isa.rowclone(self.state, a, dst, self.cfg)
+        self._op("rowclone", a, dst)
         return dst
 
     def and_(self, a: int, b: int, dst: int | None = None) -> int:
         dst = self.alloc() if dst is None else dst
-        self.state = isa.ambit_and(self.state, a, b, dst, self.cfg)
+        self._op("ambit_and", a, b, dst)
         return dst
 
     def or_(self, a: int, b: int, dst: int | None = None) -> int:
         dst = self.alloc() if dst is None else dst
-        self.state = isa.ambit_or(self.state, a, b, dst, self.cfg)
+        self._op("ambit_or", a, b, dst)
         return dst
 
     def xor(self, a: int, b: int, dst: int | None = None) -> int:
         dst = self.alloc() if dst is None else dst
-        self.state = isa.ambit_xor(self.state, a, b, dst, self.cfg)
+        self._op("ambit_xor", a, b, dst)
         return dst
 
     def not_(self, a: int, dst: int | None = None) -> int:
         dst = self.alloc() if dst is None else dst
-        self.state = isa.ambit_not(self.state, a, dst, self.cfg)
+        self._op("ambit_not", a, dst)
         return dst
 
     def maj(self, a: int, b: int, c: int, dst: int | None = None) -> int:
         dst = self.alloc() if dst is None else dst
-        self.state = isa.ambit_maj(self.state, a, b, c, dst, self.cfg)
+        self._op("ambit_maj", a, b, c, dst)
         return dst
 
     def zero(self, dst: int | None = None) -> int:
         dst = self.alloc() if dst is None else dst
-        self.state = isa.rowclone(self.state, isa.C0, dst, self.cfg)
+        self._op("rowclone", isa.C0, dst)
         return dst
 
     def shift_cols(self, a: int, k: int, dst: int | None = None) -> int:
         """Shift |k| columns via |k| migration-cell shifts (no masking)."""
         dst = self.alloc() if dst is None else dst
-        if k == 0:
-            self.state = isa.rowclone(self.state, a, dst, self.cfg)
-            return dst
-        delta = 1 if k > 0 else -1
-        self.state = isa.shift(self.state, a, dst, delta, self.cfg)
-        for _ in range(abs(k) - 1):
-            self.state = isa.shift(self.state, dst, dst, delta, self.cfg)
+        if self.eager:
+            if k == 0:
+                self.state = isa.rowclone(self.state, a, dst, self.cfg)
+                return dst
+            delta = 1 if k > 0 else -1
+            self.state = isa.shift(self.state, a, dst, delta, self.cfg)
+            for _ in range(abs(k) - 1):
+                self.state = isa.shift(self.state, dst, dst, delta, self.cfg)
+        else:
+            self._builder.shift_k(a, dst, k)
         return dst
 
     def shift_elem(self, a: int, k: int, dst: int | None = None) -> int:
@@ -146,17 +183,21 @@ class PimVM:
     # -- accounting -----------------------------------------------------------
     @property
     def time_ns(self) -> float:
+        self._flush()
         return float(self.state.meter.time_ns)
 
     @property
     def energy_nj(self) -> float:
+        self._flush()
         return float(self.state.meter.total_energy_nj)
 
     @property
     def setup_energy_nj(self) -> float:
+        self._flush()
         return float(self.state.meter.e_burst)
 
     def counts(self) -> dict:
+        self._flush()
         m = self.state.meter
         return {k: int(getattr(m, k)) for k in
                 ("n_act", "n_pre", "n_aap", "n_shift", "n_tra")}

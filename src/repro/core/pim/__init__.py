@@ -9,7 +9,11 @@ from .isa import (C0, C1, T0, T1, T2, T3, ambit_and, ambit_maj, ambit_not,
                   not_to_dcc, read_row, reserve_control_rows, rowclone, shift,
                   shift_row_words, tra, write_row)
 from .program import (bank_parallel, estimate_cost, run_shift_workload,
-                      shift_k)
+                      shift_k, shift_workload_program)
+from .ir import PimOp, PimProgram, ProgramBuilder, record
+from .compile import (CompiledProgram, compile_program, cost_pass,
+                      cost_summary, dead_copy_elimination, fuse)
+from .exec import ExecResult, execute, make_runner
 from .variation import (PAPER_TABLE4, TECH22, Tech22nm, shift_failure_rate)
 from .area import AreaModel, PAPER_TABLE5, mim_capacitor_plate_side_um
 
@@ -22,6 +26,11 @@ __all__ = [
     "not_to_dcc", "read_row", "reserve_control_rows", "rowclone", "shift",
     "shift_row_words", "tra", "write_row",
     "bank_parallel", "estimate_cost", "run_shift_workload", "shift_k",
+    "shift_workload_program",
+    "PimOp", "PimProgram", "ProgramBuilder", "record",
+    "CompiledProgram", "compile_program", "cost_pass", "cost_summary",
+    "dead_copy_elimination", "fuse",
+    "ExecResult", "execute", "make_runner",
     "PAPER_TABLE4", "TECH22", "Tech22nm", "shift_failure_rate",
     "AreaModel", "PAPER_TABLE5", "mim_capacitor_plate_side_um",
 ]

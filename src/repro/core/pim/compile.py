@@ -1,0 +1,360 @@
+"""Compilation passes over a recorded :class:`~.ir.PimProgram`.
+
+Three passes:
+
+``cost_pass``
+    Replaces the eager path's per-command ``charge_*`` threading with a
+    single vectorized fold. Per-charge-event float32/int32 increment tables
+    are built once (numpy, exact mirrors of ``timing.charge_*``), then one
+    ``lax.scan`` with a 12-scalar carry folds them **in program order** —
+    bit-exact against the eager meter (same IEEE adds, same order) without
+    stepping the (rows × words) state pytree per command.
+    ``cost_summary`` is the closed-form O(1) float64 companion for planning
+    (analytical, not bit-exact; cross-checked against ``estimate_cost``).
+
+``dead_copy_elimination``
+    Backward-liveness pass removing pure row overwrites (AAP/DRA copies,
+    host writes, fills) whose destination is rewritten before any read.
+    An *optimization*: the optimized program is cheaper by construction, so
+    its meter intentionally differs from the unoptimized stream.
+
+``fuse``
+    Lowers the stream into executor segments: maximal same-direction shift
+    chains become one k-column kernel shift, Ambit MAJ/NOT macro-idioms
+    become single bitwise kernel calls, and residual primitives batch into
+    ``lax.scan``-able runs. Fusion is semantics-preserving (bit-exact,
+    including migration-row and DCC side state); costs always come from the
+    unfused stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ir, isa
+from .state import CostMeter
+from .timing import DDR3Timing, DEFAULT_TIMING
+
+_FLOAT_FIELDS = ("time_ns", "e_act", "e_pre", "e_refresh", "e_burst",
+                 "e_background")
+_INT_FIELDS = ("n_act", "n_pre", "n_aap", "n_shift", "n_tra", "n_refresh")
+
+
+# ---------------------------------------------------------------------------
+# Cost pass
+# ---------------------------------------------------------------------------
+
+def _event_rows(op: ir.PimOp, words: int, cfg: DDR3Timing):
+    """Yield (float6, int6) increment rows for one command — one row per
+    charge event, mirroring timing.charge_* float32-for-float32."""
+    f32 = np.float32
+
+    def aap(extra_shift=0):
+        dt = f32(cfg.t_aap)
+        return ([dt, f32(2 * cfg.e_act), f32(cfg.e_pre), 0.0, 0.0,
+                 dt * f32(cfg.p_background)],
+                [2, 1, 1, extra_shift, 0, 0])
+
+    if op.op in (ir.OP_ROWCLONE, ir.OP_NOT2DCC, ir.OP_DCC2):
+        yield aap()
+    elif op.op == ir.OP_SHIFT:
+        for i in range(4):                      # charge_shift = 4 × charge_aap
+            yield aap(extra_shift=int(i == 3))
+    elif op.op in (ir.OP_DRA, ir.OP_TRA):
+        k = 2 if op.op == ir.OP_DRA else 3
+        dt = f32(cfg.tRC)
+        yield ([dt, f32(cfg.e_act + (k - 1) * cfg.e_act_extra_row),
+                f32(cfg.e_pre), 0.0, 0.0, dt * f32(cfg.p_background)],
+               [1, 1, 0, 0, int(k == 3), 0])
+    elif op.op in (ir.OP_WRITE, ir.OP_READ):
+        transfers = -(-(words * 4) // 64)       # charge_burst
+        dt = f32(cfg.tRC + transfers * 6.0)
+        yield ([dt, f32(cfg.e_act), f32(cfg.e_pre), 0.0,
+                f32(transfers * cfg.e_burst_per_64b),
+                dt * f32(cfg.p_background)],
+               [1, 1, 0, 0, 0, 0])
+    elif op.op == ir.OP_ISSUE:
+        dt = f32(cfg.t_issue)
+        yield ([dt, 0.0, 0.0, 0.0, 0.0, dt * f32(cfg.p_background)],
+               [0, 0, 0, 0, 0, 0])
+    elif op.op == ir.OP_FILL:
+        return                                   # setup: meter-free
+    else:
+        raise ValueError(op.op)
+
+
+def cost_tables(program: ir.PimProgram,
+                cfg: DDR3Timing = DEFAULT_TIMING):
+    """(m, 6) float32 + (m, 6) int32 increment tables, one row per charge
+    event in program order."""
+    frows, irows = [], []
+    for op in program.ops:
+        for f, i in _event_rows(op, program.words, cfg):
+            frows.append(f)
+            irows.append(i)
+    if not frows:
+        return (np.zeros((0, 6), np.float32), np.zeros((0, 6), np.int32))
+    return (np.asarray(frows, np.float32), np.asarray(irows, np.int32))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _fold_tables(f_tab, i_tab, f0, i0):
+    def step(carry, row):
+        cf, ci = carry
+        rf, ri = row
+        return (cf + rf, ci + ri), ()
+
+    (ff, fi), _ = jax.lax.scan(step, (f0, i0), (f_tab, i_tab))
+    return ff, fi
+
+
+def cost_pass(program: ir.PimProgram, cfg: DDR3Timing = DEFAULT_TIMING,
+              init: CostMeter | None = None) -> CostMeter:
+    """Exact meter for the whole program in one compiled fold (accumulating
+    on top of ``init`` when given) — equals the eager path bit-for-bit."""
+    f_tab, i_tab = cost_tables(program, cfg)
+    init = CostMeter.zeros() if init is None else init
+    f0 = jnp.stack([jnp.asarray(getattr(init, k), jnp.float32)
+                    for k in _FLOAT_FIELDS])
+    i0 = jnp.stack([jnp.asarray(getattr(init, k), jnp.int32)
+                    for k in _INT_FIELDS])
+    ff, fi = _fold_tables(jnp.asarray(f_tab), jnp.asarray(i_tab), f0, i0)
+    fields = {k: ff[j] for j, k in enumerate(_FLOAT_FIELDS)}
+    fields.update({k: fi[j] for j, k in enumerate(_INT_FIELDS)})
+    return CostMeter(**fields)
+
+
+def cost_summary(program: ir.PimProgram, cfg: DDR3Timing = DEFAULT_TIMING,
+                 refresh: bool = False) -> dict:
+    """Closed-form float64 totals (O(ops) table build, O(1) reduction);
+    analytical counterpart of ``program.estimate_cost``."""
+    f_tab, i_tab = cost_tables(program, cfg)
+    t, e_act, e_pre, e_ref, e_burst, e_bg = (
+        f_tab.astype(np.float64).sum(axis=0) if len(f_tab) else np.zeros(6))
+    counts = dict(zip(_INT_FIELDS,
+                      i_tab.sum(axis=0).tolist() if len(i_tab) else [0] * 6))
+    n_ref = 0
+    if refresh:
+        n_ref = int(t // cfg.tREFI)
+        n_ref = int((t + n_ref * cfg.tRFC) // cfg.tREFI)
+        t += n_ref * cfg.tRFC
+        e_ref += n_ref * cfg.e_ref
+        e_bg += n_ref * cfg.tRFC * cfg.p_background
+        counts["n_refresh"] = n_ref
+    return {
+        "time_ns": float(t), "e_act": float(e_act), "e_pre": float(e_pre),
+        "e_refresh": float(e_ref), "e_burst": float(e_burst),
+        "e_background": float(e_bg),
+        "energy_nj": float(e_act + e_pre + e_ref + e_burst + e_bg),
+        **counts,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Dead-copy elimination
+# ---------------------------------------------------------------------------
+
+def dead_copy_elimination(program: ir.PimProgram,
+                          live_out: set[int] | None = None) -> ir.PimProgram:
+    """Drop pure overwrites (rowclone/dra/write/fill) of rows that are
+    rewritten before any later read. ``live_out`` is the set of rows whose
+    final contents matter; by default all rows except the Ambit scratch
+    (T0..T3)."""
+    if live_out is None:
+        scratch = {int(t) % program.num_rows
+                   for t in (isa.T0, isa.T1, isa.T2, isa.T3)}
+        live_out = set(range(program.num_rows)) - scratch
+    live = set(live_out)
+    keep = [True] * len(program.ops)
+    for i in range(len(program.ops) - 1, -1, -1):
+        op = program.ops[i]
+        if (op.op in (ir.OP_ROWCLONE, ir.OP_DRA, ir.OP_WRITE, ir.OP_FILL)
+                and op.b not in live):
+            keep[i] = False
+            continue
+        live -= set(op.writes())
+        live |= set(op.reads())
+    ops, payloads, remap = [], [], {}
+    for flag, op in zip(keep, program.ops):
+        if not flag:
+            continue
+        if op.op == ir.OP_WRITE:
+            if op.payload not in remap:
+                remap[op.payload] = len(payloads)
+                payloads.append(program.payloads[op.payload])
+            op = dataclasses.replace(op, payload=remap[op.payload])
+        ops.append(op)
+    return ir.PimProgram(ops=tuple(ops), num_rows=program.num_rows,
+                         words=program.words, payloads=tuple(payloads))
+
+
+# ---------------------------------------------------------------------------
+# Fusion into executor segments
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SegShiftRun:
+    """k chained 1-bit shifts src→dst(→dst…), one direction."""
+    src: int
+    dst: int
+    delta: int
+    k: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SegMaj:
+    """Fused Ambit MAJ idiom (covers AND/OR via control rows)."""
+    a: int
+    b: int
+    c: int
+    dst: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SegNot:
+    """Fused NOT pair (not_to_dcc + dcc_to)."""
+    src: int
+    dst: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SegScan:
+    """Residual primitive run executed by the lax.scan interpreter."""
+    ops: tuple[ir.PimOp, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class SegHost:
+    """Host-visible op executed unrolled (read/write/fill)."""
+    op: ir.PimOp
+
+
+# Residual primitives the scan interpreter understands.
+_SCANNABLE = (ir.OP_ROWCLONE, ir.OP_DRA, ir.OP_TRA, ir.OP_NOT2DCC,
+              ir.OP_DCC2, ir.OP_SHIFT)
+
+
+def _match_maj(ops, i, num_rows):
+    """Recognize the 5-op ambit_maj expansion at ops[i:] when the fused
+    read-all-then-write form is alias-safe."""
+    if i + 5 > len(ops):
+        return None
+    t0, t1, t2 = (int(t) % num_rows for t in (isa.T0, isa.T1, isa.T2))
+    o0, o1, o2, o3, o4 = ops[i:i + 5]
+    if not (o0.op == ir.OP_ROWCLONE and o0.b == t0
+            and o1.op == ir.OP_ROWCLONE and o1.b == t1
+            and o2.op == ir.OP_ROWCLONE and o2.b == t2
+            and o3.op == ir.OP_TRA and (o3.a, o3.b, o3.c) == (t0, t1, t2)
+            and o4.op == ir.OP_ROWCLONE and o4.a == t0):
+        return None
+    # Fused form reads a, b, c before writing T0..T2: refuse when a later
+    # source would have observed an earlier scratch write.
+    if o1.a == t0 or o2.a in (t0, t1):
+        return None
+    return SegMaj(a=o0.a, b=o1.a, c=o2.a, dst=o4.b)
+
+
+# Shift chains shorter than this stay residual (scan) ops: a handful of
+# 1-bit hops costs less than a dedicated kernel segment, and keeping them in
+# the scan table lets neighboring segments coalesce into one loop.
+SHIFT_FUSE_MIN = 32
+
+
+def fuse(program: ir.PimProgram, *,
+         shift_fuse_min: int = SHIFT_FUSE_MIN) -> tuple:
+    """Lower the op stream to a segment list for the executor."""
+    ops = program.ops
+    num_rows = program.num_rows
+    segments: list = []
+    residual: list[ir.PimOp] = []
+
+    def flush_residual():
+        if residual:
+            segments.append(SegScan(ops=tuple(residual)))
+            residual.clear()
+
+    i = 0
+    while i < len(ops):
+        op = ops[i]
+        maj = _match_maj(ops, i, num_rows)
+        if maj is not None:
+            flush_residual()
+            segments.append(maj)
+            i += 5
+            continue
+        if (op.op == ir.OP_NOT2DCC and i + 1 < len(ops)
+                and ops[i + 1].op == ir.OP_DCC2):
+            flush_residual()
+            segments.append(SegNot(src=op.a, dst=ops[i + 1].b))
+            i += 2
+            continue
+        if op.op == ir.OP_SHIFT:
+            j, dst, delta = i + 1, op.b, op.delta
+            while (j < len(ops) and ops[j].op == ir.OP_SHIFT
+                   and ops[j].a == dst and ops[j].b == dst
+                   and ops[j].delta == delta):
+                j += 1
+            if j - i >= max(2, shift_fuse_min):
+                flush_residual()
+                segments.append(SegShiftRun(src=op.a, dst=dst, delta=delta,
+                                            k=j - i))
+                i = j
+                continue
+            residual.extend(ops[i:j])
+            i = j
+            continue
+        if op.op in (ir.OP_WRITE, ir.OP_READ, ir.OP_FILL):
+            flush_residual()
+            segments.append(SegHost(op=op))
+            i += 1
+            continue
+        if op.op == ir.OP_ISSUE:
+            i += 1                    # cost-only; no state effect
+            continue
+        assert op.op in _SCANNABLE, op.op
+        residual.append(op)
+        i += 1
+    flush_residual()
+    return tuple(segments)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledProgram:
+    """A program lowered to segments, with its cost tables prebuilt."""
+
+    program: ir.PimProgram
+    segments: tuple
+    f_tab: np.ndarray
+    i_tab: np.ndarray
+
+    @property
+    def num_rows(self) -> int:
+        return self.program.num_rows
+
+    @property
+    def words(self) -> int:
+        return self.program.words
+
+
+def compile_program(program: ir.PimProgram,
+                    cfg: DDR3Timing = DEFAULT_TIMING, *,
+                    optimize: bool = False,
+                    live_out: set[int] | None = None,
+                    shift_fuse_min: int = SHIFT_FUSE_MIN) -> CompiledProgram:
+    """Full pipeline: (optional DCE) → fusion → cost tables.
+
+    ``optimize=True`` applies dead-copy elimination first; the resulting
+    meter reflects the *optimized* stream (cheaper than eager — that is the
+    point), so equivalence tests run with the default ``optimize=False``.
+    """
+    if optimize:
+        program = dead_copy_elimination(program, live_out)
+    f_tab, i_tab = cost_tables(program, cfg)
+    return CompiledProgram(
+        program=program,
+        segments=fuse(program, shift_fuse_min=shift_fuse_min),
+        f_tab=f_tab, i_tab=i_tab)

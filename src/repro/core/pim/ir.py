@@ -1,0 +1,357 @@
+"""Recorded PIM instruction-stream IR.
+
+Instead of executing every ISA command eagerly (one Python-level pytree
+transition per command), a :class:`ProgramBuilder` records the command stream
+once into a :class:`PimProgram`. The program is then cost-modeled in a single
+pass, optimized, fused, and executed as a compiled artifact
+(``compile.py`` / ``exec.py``) — the trace-driven architecture of
+HBM-PIMulator and SIMDRAM's μProgram abstraction.
+
+The IR stores *primitive* commands only. Composite Ambit ops (AND/OR/XOR/
+NOT/MAJ) are macro-expanded at record time into exactly the primitive
+sequence ``isa.py`` executes, so a recorded program is command-for-command —
+and therefore cost- and bit-identical — to the eager path. The eager ISA in
+``isa.py`` is unchanged and remains the shim for old call-sites.
+
+Row operands must be concrete Python ints at record time (negative aliases
+like ``isa.T0`` resolve against ``num_rows``, as in the eager path).
+
+Text traces (``to_trace`` / ``from_trace``) use an HBM-PIMulator-style
+line-per-command format (see DESIGN.md §6) so external workloads can be
+replayed through ``benchmarks/trace_replay.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import numpy as np
+
+from . import isa
+from .state import NUM_ROWS, ROW_WORDS
+
+# Primitive opcodes. DRA copies like ROWCLONE but charges a 2-row MRA.
+OP_ISSUE = "issue"
+OP_ROWCLONE = "rowclone"
+OP_DRA = "dra"
+OP_TRA = "tra"
+OP_NOT2DCC = "not_to_dcc"
+OP_DCC2 = "dcc_to"
+OP_SHIFT = "shift"
+OP_WRITE = "write_row"
+OP_READ = "read_row"
+OP_FILL = "fill"          # zero-cost row init (reserve_control_rows)
+
+# Trace mnemonics (stable on-disk names), one line per command.
+_MNEMONIC = {
+    OP_ISSUE: "ISSUE", OP_ROWCLONE: "AAP", OP_DRA: "DRA", OP_TRA: "TRA",
+    OP_NOT2DCC: "NOT2DCC", OP_DCC2: "DCC2", OP_SHIFT: "SHIFT",
+    OP_WRITE: "HOSTW", OP_READ: "HOSTR", OP_FILL: "FILL",
+}
+_FROM_MNEMONIC = {v: k for k, v in _MNEMONIC.items()}
+
+
+def _parse_operands(op: str, toks: list[str], payloads: "list[np.ndarray]",
+                    words: int) -> "PimOp":
+    """Decode one trace line's operands (mnemonic already resolved)."""
+    if op == OP_ISSUE:
+        return PimOp(op)
+    if op in (OP_ROWCLONE, OP_DRA):
+        return PimOp(op, a=int(toks[1]), b=int(toks[2]))
+    if op == OP_TRA:
+        return PimOp(op, a=int(toks[1]), b=int(toks[2]), c=int(toks[3]))
+    if op == OP_NOT2DCC:
+        return PimOp(op, a=int(toks[1]))
+    if op == OP_DCC2:
+        return PimOp(op, b=int(toks[1]))
+    if op == OP_SHIFT:
+        return PimOp(op, a=int(toks[1]), b=int(toks[2]), delta=int(toks[3]))
+    if op == OP_WRITE:
+        row = np.frombuffer(bytes.fromhex(toks[2]), dtype="<u4")
+        if row.shape != (words,):
+            raise ValueError(
+                f"HOSTW payload is {row.size} words, trace declares {words}")
+        out = PimOp(op, b=int(toks[1]), payload=len(payloads))
+        payloads.append(row.astype(np.uint32))
+        return out
+    if op == OP_READ:
+        return PimOp(op, a=int(toks[1]))
+    assert op == OP_FILL, op
+    return PimOp(op, b=int(toks[1]), payload=int(toks[2], 16))
+
+
+@dataclasses.dataclass(frozen=True)
+class PimOp:
+    """One primitive command. ``a``/``b``/``c`` are absolute row indices
+    (src, dst, third TRA row); ``delta`` is the shift direction; ``payload``
+    indexes ``PimProgram.payloads`` for WRITE and holds the fill word for
+    FILL."""
+
+    op: str
+    a: int = 0
+    b: int = 0
+    c: int = 0
+    delta: int = 0
+    payload: int = -1
+
+    def reads(self) -> tuple[int, ...]:
+        if self.op in (OP_ROWCLONE, OP_DRA, OP_NOT2DCC, OP_SHIFT, OP_READ):
+            return (self.a,)
+        if self.op == OP_TRA:
+            return (self.a, self.b, self.c)
+        return ()
+
+    def writes(self) -> tuple[int, ...]:
+        if self.op in (OP_ROWCLONE, OP_DRA, OP_DCC2, OP_SHIFT, OP_WRITE,
+                       OP_FILL):
+            return (self.b,)
+        if self.op == OP_TRA:
+            return (self.a, self.b, self.c)
+        return ()
+
+
+@dataclasses.dataclass(frozen=True)
+class PimProgram:
+    """An immutable recorded command stream for one subarray shape."""
+
+    ops: tuple[PimOp, ...]
+    num_rows: int = NUM_ROWS
+    words: int = ROW_WORDS
+    payloads: tuple[np.ndarray, ...] = ()
+
+    def __len__(self) -> int:
+        return len(self.ops)
+
+    @property
+    def n_reads(self) -> int:
+        return sum(1 for o in self.ops if o.op == OP_READ)
+
+    def counts(self) -> dict:
+        """Static per-opcode histogram (exact, no execution)."""
+        out: dict[str, int] = {}
+        for o in self.ops:
+            out[o.op] = out.get(o.op, 0) + 1
+        return out
+
+    # -- trace import/export --------------------------------------------------
+    def to_trace(self) -> str:
+        lines = [f"# pim-trace v1 rows={self.num_rows} words={self.words}"]
+        for o in self.ops:
+            m = _MNEMONIC[o.op]
+            if o.op == OP_ISSUE:
+                lines.append(m)
+            elif o.op in (OP_ROWCLONE, OP_DRA):
+                lines.append(f"{m} {o.a} {o.b}")
+            elif o.op == OP_TRA:
+                lines.append(f"{m} {o.a} {o.b} {o.c}")
+            elif o.op == OP_NOT2DCC:
+                lines.append(f"{m} {o.a}")
+            elif o.op == OP_DCC2:
+                lines.append(f"{m} {o.b}")
+            elif o.op == OP_SHIFT:
+                lines.append(f"{m} {o.a} {o.b} {o.delta:+d}")
+            elif o.op == OP_WRITE:
+                data = self.payloads[o.payload].astype("<u4").tobytes().hex()
+                lines.append(f"{m} {o.b} {data}")
+            elif o.op == OP_READ:
+                lines.append(f"{m} {o.a}")
+            elif o.op == OP_FILL:
+                lines.append(f"{m} {o.b} {o.payload:08x}")
+        return "\n".join(lines) + "\n"
+
+    @classmethod
+    def from_trace(cls, text: str) -> "PimProgram":
+        num_rows, words = NUM_ROWS, ROW_WORDS
+        ops: list[PimOp] = []
+        payloads: list[np.ndarray] = []
+        for raw in text.splitlines():
+            line = raw.split("//")[0].strip()
+            if line.startswith("#"):
+                if "pim-trace" in line:
+                    for tok in line.split():
+                        if tok.startswith("rows="):
+                            num_rows = int(tok[5:])
+                        elif tok.startswith("words="):
+                            words = int(tok[6:])
+                continue
+            if not line:
+                continue
+            toks = line.split()
+            if toks[0] == "PIM":      # HBM-PIMulator-style prefix is accepted
+                toks = toks[1:]
+            name = toks[0].upper() if toks else ""
+            if name not in _FROM_MNEMONIC:
+                raise ValueError(f"unknown trace mnemonic: {raw!r}")
+            op = _FROM_MNEMONIC[name]
+            try:
+                ops.append(_parse_operands(op, toks, payloads, words))
+            except (IndexError, ValueError) as e:
+                raise ValueError(
+                    f"malformed operands on trace line {raw!r}: {e}") from e
+        return cls(ops=tuple(ops), num_rows=num_rows, words=words,
+                   payloads=tuple(payloads))
+
+    def save_trace(self, path) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_trace())
+
+    @classmethod
+    def load_trace(cls, path) -> "PimProgram":
+        with open(path) as f:
+            return cls.from_trace(f.read())
+
+
+class ProgramBuilder:
+    """Records the ISA surface into a :class:`PimProgram`.
+
+    Method names and operand orders mirror ``isa.py`` minus the threaded
+    state (``rowclone(src, dst)``, ``shift(src, dst, delta)``, ...), and the
+    Ambit composites expand to the identical primitive sequences, so swapping
+    ``isa.xxx(state, ...)`` for ``builder.xxx(...)`` records exactly the
+    commands the eager path would execute.
+    """
+
+    def __init__(self, num_rows: int = NUM_ROWS, words: int = ROW_WORDS):
+        self.num_rows = int(num_rows)
+        self.words = int(words)
+        self._ops: list[PimOp] = []
+        self._payloads: list[np.ndarray] = []
+        self._n_reads = 0
+
+    def _resolve(self, r) -> int:
+        if not isinstance(r, (int, np.integer)):
+            raise TypeError(
+                f"IR recording needs concrete int row indices, got {type(r)};"
+                " use the eager isa.* path for traced row operands")
+        return int(r) % self.num_rows
+
+    def __len__(self) -> int:
+        return len(self._ops)
+
+    def build(self) -> PimProgram:
+        return PimProgram(ops=tuple(self._ops), num_rows=self.num_rows,
+                          words=self.words, payloads=tuple(self._payloads))
+
+    # -- primitives -----------------------------------------------------------
+    def issue(self) -> "ProgramBuilder":
+        self._ops.append(PimOp(OP_ISSUE))
+        return self
+
+    def rowclone(self, src, dst) -> "ProgramBuilder":
+        self._ops.append(PimOp(OP_ROWCLONE, a=self._resolve(src),
+                               b=self._resolve(dst)))
+        return self
+
+    def dra(self, src, dst) -> "ProgramBuilder":
+        self._ops.append(PimOp(OP_DRA, a=self._resolve(src),
+                               b=self._resolve(dst)))
+        return self
+
+    def tra(self, r1, r2, r3) -> "ProgramBuilder":
+        self._ops.append(PimOp(OP_TRA, a=self._resolve(r1),
+                               b=self._resolve(r2), c=self._resolve(r3)))
+        return self
+
+    def not_to_dcc(self, src) -> "ProgramBuilder":
+        self._ops.append(PimOp(OP_NOT2DCC, a=self._resolve(src)))
+        return self
+
+    def dcc_to(self, dst) -> "ProgramBuilder":
+        self._ops.append(PimOp(OP_DCC2, b=self._resolve(dst)))
+        return self
+
+    def shift(self, src, dst, delta: int = +1) -> "ProgramBuilder":
+        assert delta in (+1, -1), "the migration-cell shift moves exactly 1 bit"
+        self._ops.append(PimOp(OP_SHIFT, a=self._resolve(src),
+                               b=self._resolve(dst), delta=int(delta)))
+        return self
+
+    def write_row(self, dst, row) -> "ProgramBuilder":
+        row = np.asarray(row, dtype=np.uint32)
+        assert row.shape == (self.words,), (row.shape, self.words)
+        self._ops.append(PimOp(OP_WRITE, b=self._resolve(dst),
+                               payload=len(self._payloads)))
+        self._payloads.append(row)
+        return self
+
+    def read_row(self, src) -> int:
+        """Record a host read; returns the read slot index into
+        ``ExecResult.reads``."""
+        self._ops.append(PimOp(OP_READ, a=self._resolve(src)))
+        slot = self._n_reads
+        self._n_reads += 1
+        return slot
+
+    def fill(self, dst, word: int) -> "ProgramBuilder":
+        """Zero-cost row init with a repeated 32-bit word (setup, not a DRAM
+        command — mirrors ``reserve_control_rows`` mutating bits meter-free)."""
+        self._ops.append(PimOp(OP_FILL, b=self._resolve(dst),
+                               payload=int(word) & 0xFFFF_FFFF))
+        return self
+
+    def reserve_control_rows(self) -> "ProgramBuilder":
+        return self.fill(isa.C0, 0).fill(isa.C1, 0xFFFF_FFFF)
+
+    # -- composites (identical expansion to isa.py) ---------------------------
+    def ambit_maj(self, a, b, c, dst) -> "ProgramBuilder":
+        return (self.rowclone(a, isa.T0).rowclone(b, isa.T1)
+                .rowclone(c, isa.T2).tra(isa.T0, isa.T1, isa.T2)
+                .rowclone(isa.T0, dst))
+
+    def ambit_and(self, a, b, dst) -> "ProgramBuilder":
+        return self.ambit_maj(a, b, isa.C0, dst)
+
+    def ambit_or(self, a, b, dst) -> "ProgramBuilder":
+        return self.ambit_maj(a, b, isa.C1, dst)
+
+    def ambit_not(self, src, dst) -> "ProgramBuilder":
+        return self.not_to_dcc(src).dcc_to(dst)
+
+    def ambit_xor(self, a, b, dst) -> "ProgramBuilder":
+        scratch = {self._resolve(t)
+                   for t in (isa.T0, isa.T1, isa.T2, isa.T3)}
+        clash = {self._resolve(r) for r in (a, b, dst)} & scratch
+        if clash:
+            raise ValueError(
+                f"ambit_xor operands alias its scratch rows {sorted(clash)}; "
+                "the T0..T3 expansion would clobber them mid-sequence")
+        return (self.ambit_or(a, b, isa.T3).ambit_and(a, b, dst)
+                .ambit_not(dst, dst).ambit_and(isa.T3, dst, dst))
+
+    # -- convenience ----------------------------------------------------------
+    def shift_k(self, src, dst, k: int) -> "ProgramBuilder":
+        """|k| repeated 1-bit shifts (k=0 degenerates to a copy), mirroring
+        ``program.shift_k``."""
+        if k == 0:
+            return self.rowclone(src, dst)
+        delta = 1 if k > 0 else -1
+        self.shift(src, dst, delta)
+        for _ in range(abs(k) - 1):
+            self.shift(dst, dst, delta)
+        return self
+
+
+def record(fn, num_rows: int = NUM_ROWS, words: int = ROW_WORDS) -> PimProgram:
+    """Run ``fn(builder)`` and return the recorded program."""
+    b = ProgramBuilder(num_rows, words)
+    fn(b)
+    return b.build()
+
+
+def concat(programs: Iterable[PimProgram]) -> PimProgram:
+    """Concatenate same-shape programs into one stream."""
+    programs = list(programs)
+    assert programs, "need at least one program"
+    rows, words = programs[0].num_rows, programs[0].words
+    ops: list[PimOp] = []
+    payloads: list[np.ndarray] = []
+    for p in programs:
+        assert (p.num_rows, p.words) == (rows, words), "shape mismatch"
+        off = len(payloads)
+        for o in p.ops:
+            if o.op == OP_WRITE:
+                o = dataclasses.replace(o, payload=o.payload + off)
+            ops.append(o)
+        payloads.extend(p.payloads)
+    return PimProgram(ops=tuple(ops), num_rows=rows, words=words,
+                      payloads=tuple(payloads))

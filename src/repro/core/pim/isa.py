@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .state import EVEN_MASK, ODD_MASK, SubarrayState
 from .timing import (DDR3Timing, DEFAULT_TIMING, charge_aap, charge_burst,
@@ -75,6 +76,8 @@ def shift_row_words(row: jax.Array, delta: int) -> jax.Array:
     def word_shift(x, up):  # shift whole words along the row axis, 0 fill
         if up == 0:
             return x
+        if abs(up) >= x.shape[-1]:   # whole row shifted out (e.g. fused k≥32W)
+            return jnp.zeros_like(x)
         pad = jnp.zeros(x.shape[:-1] + (abs(up),), jnp.uint32)
         if up > 0:
             return jnp.concatenate([pad, x[..., :-up]], axis=-1)
@@ -243,11 +246,25 @@ def ambit_not(state: SubarrayState, src, dst,
 
 def ambit_xor(state: SubarrayState, a, b, dst,
               cfg: DDR3Timing = DEFAULT_TIMING) -> SubarrayState:
-    """dst <- a ^ b = (a | b) & ~(a & b). Uses T0/T1 as intermediates.
+    """dst <- a ^ b = (a | b) & ~(a & b). Uses T0..T3 as intermediates.
+
+    ``dst`` may alias ``a`` or ``b`` (every MAJ step reads its operands into
+    scratch before writing), but none of the operands may resolve onto the
+    T0..T3 scratch rows themselves — the expansion would clobber them
+    mid-sequence and silently compute the wrong row, so concrete operands
+    are checked up front.
 
     Note: XOR is the workhorse of GF(2) arithmetic (AES / Reed-Solomon), which
     is why the paper pairs shifting with Ambit ops for crypto workloads.
     """
+    scratch = {t % state.num_rows for t in (T0, T1, T2, T3)}
+    for name, r in (("a", a), ("b", b), ("dst", dst)):
+        if (isinstance(r, (int, np.integer))
+                and int(r) % state.num_rows in scratch):
+            raise ValueError(
+                f"ambit_xor operand {name}={r} resolves onto scratch row "
+                f"{int(r) % state.num_rows} (T0..T3) and would be clobbered "
+                "mid-sequence")
     s = ambit_or(state, a, b, T3, cfg)       # T3 = a | b (T0..T2 are scratch)
     s = ambit_and(s, a, b, dst, cfg)         # dst = a & b
     s = ambit_not(s, dst, dst, cfg)          # dst = ~(a & b)

@@ -1,13 +1,17 @@
 """PIM program construction & execution helpers.
 
-A "program" is a Python-built straight-line sequence of ISA commands traced
-into a single jitted computation. For the paper's workloads we provide:
+A "program" is a recorded :class:`~.ir.PimProgram` instruction stream run
+through the compiling executor (``compile.py`` / ``exec.py``): cost-modeled
+in one pass and kernel-fused, instead of interpreted command-at-a-time. For
+the paper's workloads we provide:
 
     run_shift_workload(n_shifts)  — the NVMain experiment (Tables 2 & 3)
     shift_k                       — multi-bit shift by repetition (§8.0.3)
-    bank_parallel(fn, n_banks)    — §5.1.4: vmap a PIM program across banks
+    bank_parallel(prog, n_banks)  — §5.1.4: one compiled program, all banks
 
 plus a static cost estimator mirroring the timing model without tracing.
+Both paths are bit-exact against the eager ISA (tests/test_pim_ir.py); the
+eager command-at-a-time shim remains available as ``isa.*``.
 """
 from __future__ import annotations
 
@@ -16,10 +20,13 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import isa
+from .compile import CompiledProgram, compile_program
+from .ir import PimProgram, ProgramBuilder
 from .state import SubarrayState, make_subarray
-from .timing import DDR3Timing, DEFAULT_TIMING, apply_refresh
+from .timing import DDR3Timing, DEFAULT_TIMING
 
 
 def shift_k(state: SubarrayState, src, dst, k: int,
@@ -27,18 +34,53 @@ def shift_k(state: SubarrayState, src, dst, k: int,
     """Shift by |k| columns = |k| repeated 1-bit migration shifts.
 
     First shift goes src->dst, the rest dst->dst (the paper's primitive is
-    strictly 1 bit per 4-AAP sequence).
+    strictly 1 bit per 4-AAP sequence). With concrete row indices the
+    sequence is recorded as IR and run fused (one k-column kernel shift);
+    traced indices fall back to the eager shim.
     """
-    if k == 0:
-        return isa.rowclone(state, src, dst, cfg)
-    delta = 1 if k > 0 else -1
-    s = isa.shift(state, src, dst, delta, cfg)
-    for _ in range(abs(k) - 1):
-        s = isa.shift(s, dst, dst, delta, cfg)
-    return s
+    from . import exec as pim_exec
+
+    concrete = all(isinstance(r, (int, np.integer)) for r in (src, dst))
+    if not concrete:
+        if k == 0:
+            return isa.rowclone(state, src, dst, cfg)
+        delta = 1 if k > 0 else -1
+        s = isa.shift(state, src, dst, delta, cfg)
+        for _ in range(abs(k) - 1):
+            s = isa.shift(s, dst, dst, delta, cfg)
+        return s
+    compiled = _shift_k_compiled(state.num_rows, state.words,
+                                 src % state.num_rows, dst % state.num_rows,
+                                 k, cfg)
+    return pim_exec.execute(compiled, state, cfg).state
 
 
-@functools.partial(jax.jit, static_argnames=("n_shifts", "num_rows", "words"))
+@functools.lru_cache(maxsize=256)
+def _shift_k_compiled(num_rows: int, words: int, src: int, dst: int, k: int,
+                      cfg: DDR3Timing) -> CompiledProgram:
+    b = ProgramBuilder(num_rows, words)
+    b.shift_k(src, dst, k)
+    return compile_program(b.build(), cfg)
+
+
+@functools.lru_cache(maxsize=256)
+def shift_workload_program(n_shifts: int, num_rows: int = 512,
+                           words: int = 2048) -> PimProgram:
+    """The recorded Table 2/3 instruction stream: one issue burst, then N
+    chained 1-bit right shifts (row 0 → row 1 → row 1 …)."""
+    assert n_shifts >= 1, "the workload is defined for at least one shift"
+    b = ProgramBuilder(num_rows, words)
+    b.issue()
+    b.shift_k(0, 1, n_shifts)
+    return b.build()
+
+
+@functools.lru_cache(maxsize=256)
+def _shift_workload_compiled(n_shifts: int, num_rows: int,
+                             words: int) -> CompiledProgram:
+    return compile_program(shift_workload_program(n_shifts, num_rows, words))
+
+
 def run_shift_workload(row: jax.Array, n_shifts: int,
                        num_rows: int = 512, words: int = 2048) -> SubarrayState:
     """The paper's NVMain workload: N full-row 1-bit right shifts in Bank 0
@@ -46,34 +88,36 @@ def run_shift_workload(row: jax.Array, n_shifts: int,
 
     src row = 0, dst row = 1; shifts chain dst->dst so N shifts move the data
     N columns (matching "each shift operation shifts all bits ... by one
-    position" executed back-to-back).
+    position" executed back-to-back). The stream is recorded once per
+    ``n_shifts`` and executed compiled: the N-shift chain fuses to a single
+    N-column kernel shift and the meter comes from the one-fold cost pass.
     """
+    from . import exec as pim_exec
+
     state = make_subarray(num_rows, words)
     state = isa.reserve_control_rows(state)
     state = SubarrayState(bits=state.bits.at[0].set(row.astype(jnp.uint32)),
                           mig_top=state.mig_top, mig_bot=state.mig_bot,
                           dcc=state.dcc, meter=state.meter)
-    state = isa.issue(state)
-
-    def body(s, _):
-        return isa.shift(s, 1, 1, +1), ()
-
-    # First shift reads the source row; the rest chain in place.
-    state = isa.shift(state, 0, 1, +1)
-    if n_shifts > 1:
-        state, _ = jax.lax.scan(body, state, None, length=n_shifts - 1)
-    meter = apply_refresh(state.meter)
-    return SubarrayState(bits=state.bits, mig_top=state.mig_top,
-                         mig_bot=state.mig_bot, dcc=state.dcc, meter=meter)
+    compiled = _shift_workload_compiled(n_shifts, num_rows, words)
+    return pim_exec.execute(compiled, state, refresh=True).state
 
 
-def bank_parallel(fn: Callable, n_banks: int):
+def bank_parallel(fn: Callable | PimProgram | CompiledProgram, n_banks: int,
+                  cfg: DDR3Timing = DEFAULT_TIMING):
     """§5.1.4: run the same PIM program concurrently in ``n_banks`` banks.
 
     Banks are independent (separate row buffers & subarrays) so wall time is
     max over banks while energy sums — exactly the paper's claim that
     throughput scales linearly at constant energy/op.
+
+    Given a recorded/compiled program, ONE compiled artifact is vmapped
+    across a bank batch of states (states in, (states, wall, energy) out).
+    A plain callable keeps the legacy row-in, state-out contract.
     """
+    if isinstance(fn, (PimProgram, CompiledProgram)):
+        from . import exec as pim_exec
+        return pim_exec.bank_parallel(fn, cfg)
     vfn = jax.vmap(fn)
 
     def wrapped(*batched_args):

@@ -33,6 +33,8 @@ def _word_shift_up(x, n):
     """Shift whole words toward higher index along the minor axis, 0 fill."""
     if n == 0:
         return x
+    if n >= x.shape[-1]:             # whole block shifted out (fused k≥32W)
+        return jnp.zeros_like(x)
     pad = jnp.zeros(x.shape[:-1] + (n,), x.dtype)
     return jnp.concatenate([pad, x[..., :-n]], axis=-1)
 
@@ -40,6 +42,8 @@ def _word_shift_up(x, n):
 def _word_shift_down(x, n):
     if n == 0:
         return x
+    if n >= x.shape[-1]:
+        return jnp.zeros_like(x)
     pad = jnp.zeros(x.shape[:-1] + (n,), x.dtype)
     return jnp.concatenate([x[..., n:], pad], axis=-1)
 

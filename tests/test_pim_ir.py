@@ -1,0 +1,317 @@
+"""IR → passes → executor pipeline vs the eager ISA: bit- and meter-exact.
+
+The acceptance bar for the compiling executor is strict equality with the
+eager command-at-a-time path: same ``bits``, same migration/DCC side state,
+same ``CostMeter`` in every field (float32 to the last ulp — the cost pass
+replays the identical IEEE additions in one fold).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import pim
+from repro.core.pim import compile as pim_compile
+from repro.core.pim import exec as pim_exec
+from repro.core.pim import ir, isa
+
+WORDS = 8
+ROWS = 32
+
+METER_FIELDS = ("time_ns", "e_act", "e_pre", "e_refresh", "e_burst",
+                "e_background", "n_act", "n_pre", "n_aap", "n_shift",
+                "n_tra", "n_refresh")
+
+
+def _rand_row(rng):
+    return rng.integers(0, 2**32, (WORDS,), dtype=np.uint32)
+
+
+def _fresh_state():
+    return pim.reserve_control_rows(pim.make_subarray(ROWS, WORDS))
+
+
+def assert_states_equal(s_eager, s_ir, reads_eager=None, reads_ir=None):
+    for field in ("bits", "mig_top", "mig_bot", "dcc"):
+        a = np.asarray(getattr(s_eager, field))
+        b = np.asarray(getattr(s_ir, field))
+        assert np.array_equal(a, b), f"{field} mismatch"
+    for k in METER_FIELDS:
+        a = np.asarray(getattr(s_eager.meter, k))
+        b = np.asarray(getattr(s_ir.meter, k))
+        assert np.array_equal(a, b), f"meter.{k}: eager={a} ir={b}"
+    if reads_eager is not None:
+        assert len(reads_eager) == len(reads_ir)
+        for i, (x, y) in enumerate(zip(reads_eager, reads_ir)):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), f"read {i}"
+
+
+def _random_mixed_program(seed, n_ops=40):
+    """Issue the same random command stream eagerly and into a builder."""
+    rng = np.random.default_rng(seed)
+    s = _fresh_state()
+    b = ir.ProgramBuilder(ROWS, WORDS)
+    b.reserve_control_rows()
+    reads = []
+    user = list(range(ROWS - PimVMReserved))
+    for _ in range(n_ops):
+        kind = rng.choice(["write", "rowclone", "dra", "tra", "shift",
+                           "chain", "and", "or", "xor", "not", "maj",
+                           "issue", "read"])
+        pick = lambda n: [int(r) for r in rng.choice(user, n, replace=False)]
+        if kind == "write":
+            (dst,) = pick(1)
+            row = _rand_row(rng)
+            s = pim.write_row(s, dst, jnp.asarray(row))
+            b.write_row(dst, row)
+        elif kind == "rowclone":
+            src, dst = pick(2)
+            s = pim.rowclone(s, src, dst)
+            b.rowclone(src, dst)
+        elif kind == "dra":
+            src, dst = pick(2)
+            s = pim.dra(s, src, dst)
+            b.dra(src, dst)
+        elif kind == "tra":
+            r1, r2, r3 = pick(3)
+            s = pim.tra(s, r1, r2, r3)
+            b.tra(r1, r2, r3)
+        elif kind == "shift":
+            src, dst = pick(2)
+            delta = int(rng.choice([-1, 1]))
+            s = pim.shift(s, src, dst, delta)
+            b.shift(src, dst, delta)
+        elif kind == "chain":           # contiguous run → SegShiftRun fusion
+            src, dst = pick(2)
+            delta = int(rng.choice([-1, 1]))
+            k = int(rng.integers(2, 40))
+            s = pim.shift(s, src, dst, delta)
+            b.shift(src, dst, delta)
+            for _ in range(k - 1):
+                s = pim.shift(s, dst, dst, delta)
+                b.shift(dst, dst, delta)
+        elif kind in ("and", "or", "xor"):
+            a, bb, dst = pick(3)
+            fn = {"and": pim.ambit_and, "or": pim.ambit_or,
+                  "xor": pim.ambit_xor}[kind]
+            s = fn(s, a, bb, dst)
+            getattr(b, f"ambit_{kind}")(a, bb, dst)
+        elif kind == "not":
+            src, dst = pick(2)
+            s = pim.ambit_not(s, src, dst)
+            b.ambit_not(src, dst)
+        elif kind == "maj":
+            a, bb, c, dst = pick(4)
+            s = pim.ambit_maj(s, a, bb, c, dst)
+            b.ambit_maj(a, bb, c, dst)
+        elif kind == "issue":
+            s = pim.issue(s)
+            b.issue()
+        elif kind == "read":
+            (src,) = pick(1)
+            s, row = pim.read_row(s, src)
+            reads.append(row)
+            b.read_row(src)
+    return s, reads, b.build()
+
+
+PimVMReserved = 8  # keep random rows clear of C0/C1/T0..T3
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_program_equivalence(seed):
+    s_eager, reads_eager, prog = _random_mixed_program(seed)
+    res = pim_exec.execute(prog)
+    assert_states_equal(s_eager, res.state, reads_eager, res.reads)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_random_program_equivalence_jnp_lowering(seed):
+    s_eager, reads_eager, prog = _random_mixed_program(seed, n_ops=20)
+    res = pim_exec.execute(prog, use_kernels=False)
+    assert_states_equal(s_eager, res.state, reads_eager, res.reads)
+    res_k = pim_exec.execute(prog, use_kernels=True)
+    assert_states_equal(s_eager, res_k.state, reads_eager, res_k.reads)
+
+
+def test_table23_workload_n1000_exact_and_fused():
+    """Acceptance: the N=1000 Table 2/3 stream through the compiled executor
+    is bit-exact vs the eager loop, the chain fuses to one kernel segment,
+    and the cost pass produces the meter without stepping the state."""
+    rng = np.random.default_rng(0)
+    row = jnp.asarray(rng.integers(0, 2**32, (WORDS,), dtype=np.uint32))
+
+    # eager reference, command at a time
+    s = pim.reserve_control_rows(pim.make_subarray(16, WORDS))
+    s = pim.SubarrayState(bits=s.bits.at[0].set(row), mig_top=s.mig_top,
+                          mig_bot=s.mig_bot, dcc=s.dcc, meter=s.meter)
+    s = pim.issue(s)
+    s = pim.shift(s, 0, 1, +1)
+    for _ in range(999):
+        s = pim.shift(s, 1, 1, +1)
+    meter = pim.apply_refresh(s.meter)
+    s = pim.SubarrayState(bits=s.bits, mig_top=s.mig_top, mig_bot=s.mig_bot,
+                          dcc=s.dcc, meter=meter)
+
+    got = pim.run_shift_workload(row, 1000, num_rows=16, words=WORDS)
+    assert_states_equal(s, got)
+
+    compiled = pim.compile_program(pim.shift_workload_program(1000, 16, WORDS))
+    n_runs = sum(1 for seg in compiled.segments
+                 if isinstance(seg, pim_compile.SegShiftRun))
+    assert n_runs == 1 and compiled.segments[n_runs - 1].k == 1000
+
+
+def test_trace_round_trip_preserves_results():
+    s_eager, reads_eager, prog = _random_mixed_program(1)
+    prog2 = ir.PimProgram.from_trace(prog.to_trace())
+    assert prog2.ops == prog.ops
+    res = pim_exec.execute(prog2)
+    assert_states_equal(s_eager, res.state, reads_eager, res.reads)
+
+
+def test_trace_accepts_pimulator_style_lines():
+    text = """# pim-trace v1 rows=16 words=8
+# comment line
+PIM AAP 0 1  // HBM-PIMulator-style PIM prefix + trailing comment
+SHIFT 1 2 +1
+ISSUE
+"""
+    prog = ir.PimProgram.from_trace(text)
+    assert [o.op for o in prog.ops] == [ir.OP_ROWCLONE, ir.OP_SHIFT,
+                                        ir.OP_ISSUE]
+
+
+def test_cost_pass_seeded_and_zero():
+    _, _, prog = _random_mixed_program(2)
+    m0 = pim.cost_pass(prog)
+    s = _fresh_state()
+    m1 = pim.cost_pass(prog, init=s.meter)
+    assert float(m0.time_ns) == float(m1.time_ns)  # fresh meter is zero
+    assert int(m0.n_aap) == int(m1.n_aap)
+
+
+def test_cost_pass_matches_eager_meter():
+    s_eager, _, prog = _random_mixed_program(3)
+    meter = pim.cost_pass(prog)
+    for k in METER_FIELDS:
+        assert np.array_equal(np.asarray(getattr(s_eager.meter, k)),
+                              np.asarray(getattr(meter, k))), k
+
+
+def test_cost_summary_cross_checks_estimate_cost():
+    """shift_k/estimate_cost vs recorded-program cost: the closed-form
+    summary of the N-shift stream must agree with the static estimator."""
+    n = 100
+    prog = pim.shift_workload_program(n, 16, WORDS)
+    est = pim.estimate_cost(n_shifts=n)
+    summ = pim.cost_summary(prog, refresh=True)
+    assert summ["time_ns"] == pytest.approx(est["time_ns"], rel=1e-6)
+    assert summ["energy_nj"] == pytest.approx(est["energy_nj"], rel=1e-4)
+    assert summ["n_shift"] == n
+    # and the exact pass agrees with the traced meter (within f32 rounding)
+    meter = pim.cost_pass(prog)
+    assert float(meter.time_ns) == pytest.approx(
+        summ["time_ns"] - summ["n_refresh"] * pim.DEFAULT_TIMING.tRFC,
+        rel=1e-5)
+
+
+def test_shift_k_ir_matches_eager():
+    rng = np.random.default_rng(7)
+    row = jnp.asarray(_rand_row(rng))
+    for k in (0, 1, 3, 40, -5):
+        s_new = pim.shift_k(pim.write_row(_fresh_state(), 0, row), 0, 1, k)
+        s_ref = pim.write_row(_fresh_state(), 0, row)
+        if k == 0:
+            s_ref = pim.rowclone(s_ref, 0, 1)
+        else:
+            d = 1 if k > 0 else -1
+            s_ref = pim.shift(s_ref, 0, 1, d)
+            for _ in range(abs(k) - 1):
+                s_ref = pim.shift(s_ref, 1, 1, d)
+        assert_states_equal(s_ref, s_new)
+
+
+def test_dead_copy_elimination_drops_overwritten_copy():
+    b = ir.ProgramBuilder(ROWS, WORDS)
+    row = np.arange(WORDS, dtype=np.uint32)
+    b.write_row(0, row)
+    b.rowclone(0, 2)          # dead: row 2 is overwritten before any read
+    b.rowclone(0, 3)
+    b.rowclone(3, 2)          # final value of row 2
+    prog = b.build()
+    opt = pim.dead_copy_elimination(prog)
+    assert len(opt) == len(prog) - 1
+    res = pim_exec.execute(prog)
+    res_opt = pim_exec.execute(opt)
+    assert np.array_equal(np.asarray(res.state.bits[2]),
+                          np.asarray(res_opt.state.bits[2]))
+    # the optimized stream is cheaper — that is the point of the pass
+    assert float(res_opt.state.meter.time_ns) < float(res.state.meter.time_ns)
+
+
+def test_dead_copy_elimination_keeps_read_copies():
+    b = ir.ProgramBuilder(ROWS, WORDS)
+    b.write_row(0, np.arange(WORDS, dtype=np.uint32))
+    b.rowclone(0, 2)
+    b.tra(2, 0, 1)            # reads row 2 → the copy is live
+    b.rowclone(0, 2)
+    prog = b.build()
+    assert pim.dead_copy_elimination(prog).ops == prog.ops
+
+
+def test_ambit_xor_rejects_scratch_aliasing():
+    """Regression: xor operands that resolve onto T0..T3 used to be silently
+    clobbered mid-sequence; now they raise."""
+    s = _fresh_state()
+    t3 = isa.T3 % ROWS
+    for args in ((t3, 1, 2), (0, t3, 2), (0, 1, t3), (0, 1, isa.T0)):
+        with pytest.raises(ValueError, match="scratch"):
+            pim.ambit_xor(s, *args)
+    b = ir.ProgramBuilder(ROWS, WORDS)
+    with pytest.raises(ValueError, match="scratch"):
+        b.ambit_xor(0, 1, t3)
+
+
+def test_ambit_xor_dst_aliasing_is_safe():
+    """dst may alias a or b (reads go through scratch first)."""
+    rng = np.random.default_rng(11)
+    a, b = _rand_row(rng), _rand_row(rng)
+    for dst in (0, 1):
+        s = pim.write_row(_fresh_state(), 0, jnp.asarray(a))
+        s = pim.write_row(s, 1, jnp.asarray(b))
+        s = pim.ambit_xor(s, 0, 1, dst)
+        assert np.array_equal(np.asarray(s.bits[dst]), a ^ b)
+
+
+def test_bank_parallel_compiled_program():
+    """§5.1.4 via ONE compiled program vmapped across banks."""
+    rng = np.random.default_rng(9)
+    n_banks = 4
+    prog = pim.shift_workload_program(8, 16, WORDS)
+
+    states = []
+    rows = rng.integers(0, 2**32, (n_banks, WORDS), dtype=np.uint32)
+    import jax
+    base = jax.vmap(lambda _: pim.reserve_control_rows(
+        pim.make_subarray(16, WORDS)))(jnp.arange(n_banks))
+    base = pim.SubarrayState(
+        bits=base.bits.at[:, 0].set(jnp.asarray(rows)),
+        mig_top=base.mig_top, mig_bot=base.mig_bot, dcc=base.dcc,
+        meter=base.meter)
+    out, wall, energy = pim.bank_parallel(prog, n_banks)(base)
+
+    single = pim.run_shift_workload(jnp.asarray(rows[0]), 8, num_rows=16,
+                                    words=WORDS)
+    # refresh is a post-pass, not part of the recorded stream
+    assert wall == pytest.approx(
+        float(single.meter.time_ns), rel=1e-6)
+    assert energy == pytest.approx(
+        n_banks * float(single.meter.total_energy_nj), rel=1e-5)
+    assert np.array_equal(np.asarray(out.bits[0, 1]),
+                          np.asarray(single.bits[1]))
+
+
+def test_builder_rejects_traced_rows():
+    b = ir.ProgramBuilder(ROWS, WORDS)
+    with pytest.raises(TypeError, match="concrete int"):
+        b.rowclone(jnp.int32(0), 1)

@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+
+try:
+    from hypothesis import given, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # offline fallback: deterministic example loops below
+    HAVE_HYPOTHESIS = False
 
 from repro.core import pim
 
@@ -117,9 +122,7 @@ def test_surrounding_rows_preserved(state):
     assert np.array_equal(np.asarray(s.bits[3]), np.asarray(rows[3]))
 
 
-@given(st.integers(min_value=0, max_value=(1 << (32 * WORDS)) - 1),
-       st.integers(min_value=1, max_value=5))
-def test_shift_k_property(value, k):
+def _check_shift_k(value, k):
     """k right shifts == one k-column big-int shift (edge bits drop)."""
     s = pim.reserve_control_rows(pim.make_subarray(16, WORDS))
     s = pim.write_row(s, 0, _int_to_row(value))
@@ -128,14 +131,36 @@ def test_shift_k_property(value, k):
     assert _row_to_int(s.bits[1]) == expect
 
 
-@given(st.integers(min_value=0, max_value=(1 << (32 * WORDS)) - 1))
-def test_shift_round_trip_loses_only_edge(value):
+def _check_shift_round_trip(value):
     s = pim.reserve_control_rows(pim.make_subarray(16, WORDS))
     s = pim.write_row(s, 0, _int_to_row(value))
     s = pim.shift(s, 0, 1, +1)
     s = pim.shift(s, 1, 2, -1)
     top_bit_cleared = value & ((1 << (32 * WORDS - 1)) - 1)
     assert _row_to_int(s.bits[2]) == top_bit_cleared
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(min_value=0, max_value=(1 << (32 * WORDS)) - 1),
+           st.integers(min_value=1, max_value=5))
+    def test_shift_k_property(value, k):
+        _check_shift_k(value, k)
+
+    @given(st.integers(min_value=0, max_value=(1 << (32 * WORDS)) - 1))
+    def test_shift_round_trip_loses_only_edge(value):
+        _check_shift_round_trip(value)
+else:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_shift_k_property(seed):
+        rng = np.random.default_rng(seed)
+        value = int(rng.integers(0, 1 << 63)) | (seed << (32 * WORDS - 8))
+        _check_shift_k(value & ((1 << (32 * WORDS)) - 1),
+                       int(rng.integers(1, 6)))
+
+    @pytest.mark.parametrize("value", [0, 1, (1 << (32 * WORDS)) - 1,
+                                       0xDEADBEEF << 64, 1 << (32 * WORDS - 1)])
+    def test_shift_round_trip_loses_only_edge(value):
+        _check_shift_round_trip(value)
 
 
 def test_bank_parallel_energy_and_wall_time():
