@@ -1,9 +1,16 @@
 """Replay an external PIM command trace through the compiling executor.
 
-Accepts the repo's ``pim-trace v1`` text format (HBM-PIMulator-style: one
+Accepts the repo's ``pim-trace`` text formats (HBM-PIMulator-style: one
 command per line, ``#``/``//`` comments, optional ``PIM`` prefix — see
-DESIGN.md §6). Prints the analytical cost summary and the executed meter,
-and optionally re-exports the parsed program (round-trip check).
+DESIGN.md §6/§7):
+
+- ``pim-trace v1`` — one bank; replayed through ``pim.execute``.
+- ``pim-trace v2`` — ``banks=N`` header plus ``BANK <b>`` line prefixes;
+  replayed device-level through the workload scheduler (``pim.schedule``),
+  reporting wall = bus serialization + max over banks and summed energy.
+
+Prints the analytical cost summary and the executed meter, and optionally
+re-exports the parsed program(s) (round-trip check).
 
     PYTHONPATH=src python -m benchmarks.trace_replay TRACE [--out TRACE2]
 
@@ -15,25 +22,17 @@ from __future__ import annotations
 import argparse
 import json
 
+import numpy as np
+
 from repro.core import pim
 
 
-def replay(trace_path: str | None, out_path: str | None = None,
-           report=print):
-    if trace_path is None:
-        prog = pim.shift_workload_program(1000, 64, 2048)
-        report("no trace given — replaying the recorded Table 2/3 workload "
-               f"(N=1000, {len(prog)} commands)")
-    else:
-        prog = pim.PimProgram.load_trace(trace_path)
-        report(f"loaded {trace_path}: {len(prog)} commands, "
-               f"{prog.num_rows} rows x {prog.words} words")
+def _replay_single(prog, report):
     report(f"opcode histogram: {prog.counts()}")
-
     summary = pim.cost_summary(prog, refresh=True)
     res = pim.execute(prog, refresh=True)
     meter = res.state.meter
-    out = {
+    return {
         "n_commands": len(prog),
         "summary_time_ns": summary["time_ns"],
         "summary_energy_nj": summary["energy_nj"],
@@ -41,12 +40,61 @@ def replay(trace_path: str | None, out_path: str | None = None,
         "meter_energy_nj": float(meter.total_energy_nj),
         "n_reads": len(res.reads),
     }
+
+
+def _replay_device(programs, report):
+    rows = programs[0].num_rows
+    words = programs[0].words
+    cfg = pim.DeviceConfig(channels=1, ranks=1,
+                           banks_per_rank=len(programs),
+                           num_rows=rows, words=words)
+    report(f"device replay: {len(programs)} banks x {rows} rows x "
+           f"{words} words")
+    for b, p in enumerate(programs):
+        report(f"  bank {b}: {len(p)} commands {p.counts()}")
+    res = pim.schedule(pim.make_device(cfg), programs)
+    return {
+        "n_banks": len(programs),
+        "n_commands": sum(len(p) for p in programs),
+        "wall_ns": float(res.wall_ns),
+        "bus_ns": float(res.bus_ns),
+        "energy_nj": float(res.energy_nj),
+        "n_reads": sum(len(r) for r in res.reads),
+    }
+
+
+def replay(trace_path: str | None, out_path: str | None = None,
+           report=print):
+    if trace_path is None:
+        programs = (pim.shift_workload_program(1000, 64, 2048),)
+        report("no trace given — replaying the recorded Table 2/3 workload "
+               f"(N=1000, {len(programs[0])} commands)")
+    else:
+        with open(trace_path) as f:
+            programs = pim.from_trace_banks(f.read())
+        report(f"loaded {trace_path}: {len(programs)} bank(s), "
+               f"{sum(len(p) for p in programs)} commands, "
+               f"{programs[0].num_rows} rows x {programs[0].words} words")
+
+    if len(programs) == 1:
+        out = _replay_single(programs[0], report)
+    else:
+        out = _replay_device(programs, report)
     report(json.dumps(out, indent=2, sort_keys=True))
 
     if out_path:
-        prog.save_trace(out_path)
-        rt = pim.PimProgram.load_trace(out_path)
-        assert rt.ops == prog.ops, "trace round-trip mismatch"
+        text = (programs[0].to_trace() if len(programs) == 1
+                else pim.to_trace_banks(programs))
+        with open(out_path, "w") as f:
+            f.write(text)
+        rt = pim.from_trace_banks(text)
+        assert tuple(p.ops for p in rt) == tuple(p.ops for p in programs), \
+            "trace round-trip mismatch"
+        assert all(
+            np.array_equal(x, y)
+            for p, q in zip(rt, programs)
+            for x, y in zip(p.payloads, q.payloads)), \
+            "trace payload round-trip mismatch"
         report(f"wrote {out_path} (round-trip verified)")
     return out
 
@@ -54,9 +102,9 @@ def replay(trace_path: str | None, out_path: str | None = None,
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("trace", nargs="?", default=None,
-                    help="pim-trace v1 file to replay")
+                    help="pim-trace v1/v2 file to replay")
     ap.add_argument("--out", default=None,
-                    help="re-export the parsed program to this path")
+                    help="re-export the parsed program(s) to this path")
     args = ap.parse_args()
     replay(args.trace, args.out)
 

@@ -15,29 +15,28 @@ import numpy as np
 
 
 def pack_elements(values: np.ndarray, width: int, words: int) -> jnp.ndarray:
-    """Pack integer elements (< 2**width) into a (words,) uint32 row."""
+    """Pack integer elements (< 2**width) into a (words,) uint32 row.
+
+    Vectorized (bit-matrix + little-endian packbits): device-level runs pack
+    multi-KB rows, where the old per-bit Python loop dominated wall time.
+    """
     values = np.asarray(values, dtype=np.uint64)
     n = values.shape[0]
     assert n * width <= words * 32, "row overflow"
     bits = np.zeros(words * 32, dtype=np.uint8)
-    for e in range(n):
-        for j in range(width):
-            bits[e * width + j] = (values[e] >> j) & 1
-    out = np.zeros(words, dtype=np.uint32)
-    for c in np.nonzero(bits)[0]:
-        out[c // 32] |= np.uint32(1) << np.uint32(c % 32)
-    return jnp.asarray(out)
+    shifts = np.arange(width, dtype=np.uint64)
+    bits[:n * width] = ((values[:, None] >> shifts) & 1).reshape(-1)
+    packed = np.packbits(bits, bitorder="little")
+    return jnp.asarray(packed.view("<u4").astype(np.uint32))
 
 
 def unpack_elements(row, width: int, count: int) -> np.ndarray:
     """Inverse of ``pack_elements``."""
-    row = np.asarray(row, dtype=np.uint32)
-    full = 0
-    for i, w in enumerate(row):
-        full |= int(w) << (32 * i)
-    mask = (1 << width) - 1
-    return np.array([(full >> (e * width)) & mask for e in range(count)],
-                    dtype=np.uint64)
+    row = np.ascontiguousarray(np.asarray(row).astype("<u4"))
+    bits = np.unpackbits(row.view(np.uint8), bitorder="little")
+    assert count * width <= bits.size, "row underflow"
+    mat = bits[:count * width].reshape(count, width).astype(np.uint64)
+    return mat @ (np.uint64(1) << np.arange(width, dtype=np.uint64))
 
 
 def _pattern_row(width: int, words: int, element_pattern: int) -> jnp.ndarray:

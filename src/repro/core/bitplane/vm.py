@@ -13,14 +13,26 @@ host-written once per pattern and cached (setup cost is charged via
 ``write_row`` like any other host traffic, and reported separately by
 ``setup_energy_nj``). ``PimVM(..., eager=True)`` keeps the old
 command-at-a-time execution via the ``isa`` shim.
+
+``PimVM(..., n_banks=N)`` shards the row's lanes across N device banks
+(§5.1.4): every method records the SAME command stream, but host payloads
+(loads, masks) are split lane-wise so bank ``b`` operates on lanes
+``[b*L/N, (b+1)*L/N)``. Flushes run through the device scheduler
+(``pim.schedule``) as ONE compiled runner vmapped over the banks;
+``time_ns`` is then the device wall clock (bus serialization + max over
+banks) and ``energy_nj`` the sum — the lanes-sharded results are bit-exact
+against the same VM program on a single ``n_banks * words``-wide subarray.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from ..pim import isa
 from ..pim import exec as pim_exec
-from ..pim.ir import ProgramBuilder
+from ..pim.device import DeviceConfig, make_device
+from ..pim.ir import PimProgram, ProgramBuilder
+from ..pim.schedule import schedule
 from ..pim.state import SubarrayState, make_subarray
 from ..pim.timing import DDR3Timing, DEFAULT_TIMING
 from . import layout
@@ -30,21 +42,37 @@ class PimVM:
     RESERVED_TAIL = 8  # C0/C1/T0..T3 + margin
 
     def __init__(self, width: int, num_rows: int = 128, words: int = 16,
-                 cfg: DDR3Timing = DEFAULT_TIMING, eager: bool = False):
+                 cfg: DDR3Timing = DEFAULT_TIMING, eager: bool = False,
+                 n_banks: int = 1):
         assert (words * 32) % width == 0
+        assert words % n_banks == 0, (words, n_banks)
         self.width = width
         self.words = words
         self.cfg = cfg
         self.eager = eager
+        self.n_banks = n_banks
         self.lanes = (words * 32) // width
-        st = make_subarray(num_rows, words)
-        self.state: SubarrayState = isa.reserve_control_rows(st)
         self._num_rows = num_rows
-        self._builder = ProgramBuilder(num_rows, words)
         self._reads: tuple = ()
         self._free = list(range(num_rows - self.RESERVED_TAIL - 1, -1, -1))
         self._mask_rows: dict[int, int] = {}
         self._setup_energy_marker = 0.0
+        if n_banks == 1:
+            st = make_subarray(num_rows, words)
+            self.state: SubarrayState = isa.reserve_control_rows(st)
+            self._builder = ProgramBuilder(num_rows, words)
+        else:
+            assert not eager, "lane sharding needs the recorded-IR path"
+            self.bank_words = words // n_banks
+            assert (self.bank_words * 32) % width == 0, \
+                "element width must tile the per-bank word slice"
+            self.bank_lanes = (self.bank_words * 32) // width
+            self._builder = ProgramBuilder(num_rows, self.bank_words)
+            self._bank_payloads: list[list[np.ndarray]] = []
+            self._device = make_device(DeviceConfig(
+                channels=1, ranks=1, banks_per_rank=n_banks,
+                num_rows=num_rows, words=self.bank_words, timing=cfg))
+            self._wall_ns = 0.0
 
     # -- recording / flushing --------------------------------------------------
     def _op(self, name: str, *args) -> None:
@@ -56,14 +84,38 @@ class PimVM:
         else:
             getattr(self._builder, name)(*args)
 
+    def _write_sharded(self, reg: int, full_row: np.ndarray) -> None:
+        """Record one HOSTW whose payload differs per bank: the recorded op
+        (and slot index) is shared, the data is the bank's word slice."""
+        w = self.bank_words
+        slices = [np.asarray(full_row[b * w:(b + 1) * w], dtype=np.uint32)
+                  for b in range(self.n_banks)]
+        self._builder.write_row(reg, slices[0])
+        self._bank_payloads.append(slices)
+
     def _flush(self) -> None:
         """Execute the pending recorded stream against the current state."""
         if len(self._builder) == 0:
             return
-        res = pim_exec.execute(self._builder.build(), self.state, self.cfg)
-        self.state = res.state
-        self._reads = res.reads
-        self._builder = ProgramBuilder(self._num_rows, self.words)
+        if self.n_banks == 1:
+            res = pim_exec.execute(self._builder.build(), self.state, self.cfg)
+            self.state = res.state
+            self._reads = res.reads
+            self._builder = ProgramBuilder(self._num_rows, self.words)
+            return
+        prog = self._builder.build()
+        programs = [
+            PimProgram(ops=prog.ops, num_rows=prog.num_rows,
+                       words=prog.words,
+                       payloads=tuple(rows[b] for rows in
+                                      self._bank_payloads))
+            for b in range(self.n_banks)]
+        res = schedule(self._device, programs)
+        self._device = res.state
+        self._reads = res.reads            # per bank, slot order
+        self._wall_ns += float(res.wall_ns)
+        self._builder = ProgramBuilder(self._num_rows, self.bank_words)
+        self._bank_payloads = []
 
     # -- register management -------------------------------------------------
     def alloc(self) -> int:
@@ -73,10 +125,16 @@ class PimVM:
         self._free.extend(regs)
 
     # -- host I/O -------------------------------------------------------------
+    def _host_write(self, reg: int, full_row: np.ndarray) -> None:
+        if self.n_banks == 1:
+            self._op("write_row", reg, full_row)
+        else:
+            self._write_sharded(reg, full_row)
+
     def load(self, values, reg: int | None = None) -> int:
         reg = self.alloc() if reg is None else reg
         row = layout.pack_elements(np.asarray(values), self.width, self.words)
-        self._op("write_row", reg, np.asarray(row))
+        self._host_write(reg, np.asarray(row))
         return reg
 
     def read(self, reg: int) -> np.ndarray:
@@ -85,7 +143,12 @@ class PimVM:
         else:
             slot = self._builder.read_row(reg)
             self._flush()
-            row = self._reads[slot]
+            if self.n_banks == 1:
+                row = self._reads[slot]
+            else:
+                row = np.concatenate(
+                    [np.asarray(self._reads[b][slot])
+                     for b in range(self.n_banks)])
         return layout.unpack_elements(row, self.width, self.lanes)
 
     def mask(self, element_pattern: int) -> int:
@@ -93,7 +156,7 @@ class PimVM:
         if element_pattern not in self._mask_rows:
             reg = self.alloc()
             row = layout.const_row(self.width, self.words, element_pattern)
-            self._op("write_row", reg, np.asarray(row))
+            self._host_write(reg, np.asarray(row))
             self._mask_rows[element_pattern] = reg
         return self._mask_rows[element_pattern]
 
@@ -183,21 +246,32 @@ class PimVM:
     # -- accounting -----------------------------------------------------------
     @property
     def time_ns(self) -> float:
+        """Single bank: the subarray meter. Sharded: the device wall clock
+        (bus serialization + max over banks) accumulated across flushes."""
         self._flush()
-        return float(self.state.meter.time_ns)
+        if self.n_banks == 1:
+            return float(self.state.meter.time_ns)
+        return self._wall_ns
 
     @property
     def energy_nj(self) -> float:
         self._flush()
-        return float(self.state.meter.total_energy_nj)
+        if self.n_banks == 1:
+            return float(self.state.meter.total_energy_nj)
+        return float(jnp.sum(self._device.banks.meter.total_energy_nj))
 
     @property
     def setup_energy_nj(self) -> float:
         self._flush()
-        return float(self.state.meter.e_burst)
+        if self.n_banks == 1:
+            return float(self.state.meter.e_burst)
+        return float(jnp.sum(self._device.banks.meter.e_burst))
 
     def counts(self) -> dict:
         self._flush()
-        m = self.state.meter
-        return {k: int(getattr(m, k)) for k in
-                ("n_act", "n_pre", "n_aap", "n_shift", "n_tra")}
+        keys = ("n_act", "n_pre", "n_aap", "n_shift", "n_tra")
+        if self.n_banks == 1:
+            m = self.state.meter
+            return {k: int(getattr(m, k)) for k in keys}
+        m = self._device.banks.meter
+        return {k: int(jnp.sum(getattr(m, k))) for k in keys}

@@ -10,10 +10,15 @@ from .isa import (C0, C1, T0, T1, T2, T3, ambit_and, ambit_maj, ambit_not,
                   shift_row_words, tra, write_row)
 from .program import (bank_parallel, estimate_cost, run_shift_workload,
                       shift_k, shift_workload_program)
-from .ir import PimOp, PimProgram, ProgramBuilder, record
+from .ir import (PimOp, PimProgram, ProgramBuilder, from_trace_banks,
+                 record, to_trace_banks)
 from .compile import (CompiledProgram, compile_program, cost_pass,
                       cost_summary, dead_copy_elimination, fuse)
 from .exec import ExecResult, execute, make_runner
+from .device import (DeviceConfig, DeviceState, bus_time_ns, device_wall_ns,
+                     make_device, paper_device)
+from .schedule import (ScheduleResult, schedule, shard_lanes, shard_rows,
+                       stream_key)
 from .variation import (PAPER_TABLE4, TECH22, Tech22nm, shift_failure_rate)
 from .area import AreaModel, PAPER_TABLE5, mim_capacitor_plate_side_um
 
@@ -28,9 +33,13 @@ __all__ = [
     "bank_parallel", "estimate_cost", "run_shift_workload", "shift_k",
     "shift_workload_program",
     "PimOp", "PimProgram", "ProgramBuilder", "record",
+    "from_trace_banks", "to_trace_banks",
     "CompiledProgram", "compile_program", "cost_pass", "cost_summary",
     "dead_copy_elimination", "fuse",
     "ExecResult", "execute", "make_runner",
+    "DeviceConfig", "DeviceState", "bus_time_ns", "device_wall_ns",
+    "make_device", "paper_device",
+    "ScheduleResult", "schedule", "shard_lanes", "shard_rows", "stream_key",
     "PAPER_TABLE4", "TECH22", "Tech22nm", "shift_failure_rate",
     "AreaModel", "PAPER_TABLE5", "mim_capacitor_plate_side_um",
 ]

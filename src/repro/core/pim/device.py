@@ -1,0 +1,129 @@
+"""Device-level model: channels × ranks × banks over the subarray runtime.
+
+The paper's §5.1.4 configuration is 2 channels × 2 ranks × 8 banks/rank =
+32 independently-operating banks, each modeled here as one
+:class:`~.state.SubarrayState`. Banks execute concurrently (separate row
+buffers and sense amplifiers) but share the command bus, so the device-level
+wall clock is
+
+    wall = bus serialization + max over banks of in-bank execution time
+    energy = sum over banks                      (the paper's constant nJ/op)
+
+Bus serialization charges each bank's per-burst ``ISSUE`` overhead
+(``DDR3Timing.t_issue``) back-to-back: the memory controller can only drive
+one command burst onto a channel at a time, while the activated banks then
+run their streams in parallel. With one bank this degenerates to exactly the
+single-subarray meter (issue + execution), which is what keeps device runs
+bit-comparable to the PR-1 executor.
+
+``DeviceState`` is a registered pytree whose leaves carry a leading bank
+axis, so one compiled program vmaps across any bank subset; heterogeneous
+per-bank programs are the scheduler's job (``schedule.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ir
+from .state import NUM_ROWS, ROW_WORDS, SubarrayState, make_subarray
+from .timing import DDR3Timing, DEFAULT_TIMING
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceConfig:
+    """A DRAM device: ``channels × ranks × banks_per_rank`` subarray-banks,
+    all sharing one subarray geometry and timing model. Frozen/hashable so
+    it can sit in pytree metadata and cache keys."""
+
+    channels: int = 2
+    ranks: int = 2
+    banks_per_rank: int = 8
+    num_rows: int = NUM_ROWS
+    words: int = ROW_WORDS
+    timing: DDR3Timing = DEFAULT_TIMING
+
+    @property
+    def n_banks(self) -> int:
+        return self.channels * self.ranks * self.banks_per_rank
+
+    def bank_coords(self, bank: int) -> tuple[int, int, int]:
+        """Flat bank index → (channel, rank, bank-in-rank)."""
+        assert 0 <= bank < self.n_banks, bank
+        ch, rest = divmod(bank, self.ranks * self.banks_per_rank)
+        rk, bk = divmod(rest, self.banks_per_rank)
+        return ch, rk, bk
+
+
+# §5.1.4 device sizes used throughout benchmarks: 1, 8 (one rank), 32 (all).
+def paper_device(n_banks: int, num_rows: int = NUM_ROWS,
+                 words: int = ROW_WORDS,
+                 timing: DDR3Timing = DEFAULT_TIMING) -> DeviceConfig:
+    """The paper's DDR3 topology scaled down to ``n_banks`` total banks."""
+    shapes = {1: (1, 1, 1), 2: (1, 1, 2), 4: (1, 1, 4), 8: (1, 1, 8),
+              16: (1, 2, 8), 32: (2, 2, 8)}
+    if n_banks not in shapes:
+        raise ValueError(
+            f"n_banks must be one of {sorted(shapes)}, got {n_banks}")
+    ch, rk, bk = shapes[n_banks]
+    return DeviceConfig(channels=ch, ranks=rk, banks_per_rank=bk,
+                        num_rows=num_rows, words=words, timing=timing)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["banks"],
+    meta_fields=["config"],
+)
+@dataclasses.dataclass
+class DeviceState:
+    """All banks of one device; every ``banks`` leaf has a leading
+    ``(n_banks,)`` axis."""
+
+    banks: SubarrayState
+    config: DeviceConfig
+
+    @property
+    def n_banks(self) -> int:
+        return self.config.n_banks
+
+    def bank(self, b: int) -> SubarrayState:
+        """One bank's state, unbatched (host-side convenience)."""
+        return jax.tree_util.tree_map(lambda x: x[b], self.banks)
+
+    def with_banks(self, banks: SubarrayState) -> "DeviceState":
+        return DeviceState(banks=banks, config=self.config)
+
+
+def make_device(config: DeviceConfig, reserve: bool = True) -> DeviceState:
+    """Fresh device; ``reserve`` initializes the Ambit C0/C1 control rows in
+    every bank (meter-free, as in ``isa.reserve_control_rows``)."""
+    from .isa import reserve_control_rows
+
+    def one(_):
+        s = make_subarray(config.num_rows, config.words)
+        return reserve_control_rows(s) if reserve else s
+
+    return DeviceState(banks=jax.vmap(one)(jnp.arange(config.n_banks)),
+                       config=config)
+
+
+def bus_time_ns(program: ir.PimProgram | None,
+                timing: DDR3Timing = DEFAULT_TIMING) -> float:
+    """Command-bus occupancy of one bank's stream: its ISSUE bursts are the
+    only part that serializes device-wide."""
+    if program is None:
+        return 0.0
+    n_issue = sum(1 for o in program.ops if o.op == ir.OP_ISSUE)
+    return n_issue * timing.t_issue
+
+
+def device_wall_ns(bus_ns, exec_ns) -> jnp.ndarray:
+    """wall = serialized bus traffic + slowest bank's in-bank execution."""
+    bus_ns = jnp.asarray(bus_ns, jnp.float32)
+    exec_ns = jnp.asarray(exec_ns, jnp.float32)
+    return jnp.sum(bus_ns) + (jnp.max(exec_ns) if exec_ns.size
+                              else jnp.float32(0.0))

@@ -204,9 +204,11 @@ def _scan_segment(seg: _SegTable, carry, num_rows: int):
 # Segment walk
 # ---------------------------------------------------------------------------
 
-def _run_segments(compiled: CompiledProgram, carry, use_kernels, interpret):
+def _run_segments(compiled: CompiledProgram, carry, use_kernels, interpret,
+                  payloads=None):
     reads = []
-    payloads = [jnp.asarray(p) for p in compiled.program.payloads]
+    if payloads is None:
+        payloads = [jnp.asarray(p) for p in compiled.program.payloads]
     for seg in _coalesce(compiled.segments, use_kernels):
         bits, mt, mb, dcc = carry
         if isinstance(seg, SegShiftRun):
@@ -247,12 +249,20 @@ def _run_segments(compiled: CompiledProgram, carry, use_kernels, interpret):
 def make_runner(program, cfg: DDR3Timing = DEFAULT_TIMING, *,
                 use_kernels: bool | None = None,
                 interpret: bool | None = None,
-                refresh: bool = False):
+                refresh: bool = False,
+                payload_arg: bool = False):
     """Build a jitted ``state -> ExecResult`` function for one program.
 
-    The returned runner is cached per (program, flags) and is vmap-able, so
-    ``bank_parallel`` maps ONE compiled program across banks instead of
-    re-tracing the eager interpreter per bank.
+    The returned runner is cached per (program, flags, cfg-value) and is
+    vmap-able, so ``bank_parallel`` maps ONE compiled program across banks
+    instead of re-tracing the eager interpreter per bank.
+
+    With ``payload_arg=True`` the runner takes HOSTW payloads as a second
+    argument — a ``(n_payloads, words)`` uint32 array — instead of baking
+    ``program.payloads`` in as constants. This is how the device scheduler
+    (``schedule.py``) runs banks whose command streams are identical but
+    whose written data differs: one compiled runner, vmapped over
+    ``(states, payload_stacks)``.
     """
     compiled = _as_compiled(program, cfg)
     if use_kernels is None:
@@ -261,7 +271,9 @@ def make_runner(program, cfg: DDR3Timing = DEFAULT_TIMING, *,
     if cache is None:
         cache = {}
         object.__setattr__(compiled, "_runner_cache", cache)
-    key = (use_kernels, interpret, refresh, id(cfg))
+    # Key on the frozen cfg VALUE: id(cfg) could alias a dead cfg's reused id
+    # (stale refresh constants) and always missed for equal-but-distinct cfgs.
+    key = (use_kernels, interpret, refresh, payload_arg, cfg)
     if key in cache:
         return cache[key]
 
@@ -269,10 +281,10 @@ def make_runner(program, cfg: DDR3Timing = DEFAULT_TIMING, *,
     i_tab = jnp.asarray(compiled.i_tab)
 
     @jax.jit
-    def run(state: SubarrayState):
+    def run(state: SubarrayState, payloads=None):
         carry = (state.bits, state.mig_top, state.mig_bot, state.dcc)
         (bits, mt, mb, dcc), reads = _run_segments(
-            compiled, carry, use_kernels, interpret)
+            compiled, carry, use_kernels, interpret, payloads=payloads)
         f0 = jnp.stack([jnp.asarray(getattr(state.meter, k), jnp.float32)
                         for k in pim_compile._FLOAT_FIELDS])
         i0 = jnp.stack([jnp.asarray(getattr(state.meter, k), jnp.int32)
@@ -288,11 +300,16 @@ def make_runner(program, cfg: DDR3Timing = DEFAULT_TIMING, *,
         return SubarrayState(bits=bits, mig_top=mt, mig_bot=mb, dcc=dcc,
                              meter=meter), reads
 
-    def runner(state: SubarrayState) -> ExecResult:
-        out_state, reads = run(state)
-        return ExecResult(state=out_state, reads=reads)
-
-    runner.traced = run          # raw (state) -> (state, reads), for vmap
+    if payload_arg:
+        def runner(state: SubarrayState, payloads) -> ExecResult:
+            out_state, reads = run(state, payloads)
+            return ExecResult(state=out_state, reads=reads)
+        runner.traced = run      # (state, payloads) -> (state, reads)
+    else:
+        def runner(state: SubarrayState) -> ExecResult:
+            out_state, reads = run(state)
+            return ExecResult(state=out_state, reads=reads)
+        runner.traced = run      # raw (state) -> (state, reads), for vmap
     cache[key] = runner
     return runner
 

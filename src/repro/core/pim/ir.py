@@ -18,7 +18,11 @@ like ``isa.T0`` resolve against ``num_rows``, as in the eager path).
 
 Text traces (``to_trace`` / ``from_trace``) use an HBM-PIMulator-style
 line-per-command format (see DESIGN.md §6) so external workloads can be
-replayed through ``benchmarks/trace_replay.py``.
+replayed through ``benchmarks/trace_replay.py``. Multi-bank (device-level)
+streams serialize as ``pim-trace v2`` — a ``banks=N`` header plus
+``BANK <b>`` line prefixes — via ``to_trace_banks``/``from_trace_banks``
+(DESIGN.md §7). Imports validate operands (row ranges, SHIFT delta) with
+line-numbered errors instead of letting the executor mis-execute them.
 """
 from __future__ import annotations
 
@@ -52,32 +56,52 @@ _FROM_MNEMONIC = {v: k for k, v in _MNEMONIC.items()}
 
 
 def _parse_operands(op: str, toks: list[str], payloads: "list[np.ndarray]",
-                    words: int) -> "PimOp":
-    """Decode one trace line's operands (mnemonic already resolved)."""
+                    words: int, num_rows: int) -> "PimOp":
+    """Decode one trace line's operands (mnemonic already resolved).
+
+    Operands are validated here so a malformed trace fails at import, not as
+    a silent mis-execution downstream: row indices must lie in
+    ``[0, num_rows)`` (the executor would otherwise wrap them ``% num_rows``)
+    and SHIFT's delta must be exactly ±1 (the migration-cell primitive moves
+    one bit; ``_op_rows`` would quietly treat any positive delta as +1).
+    """
+    def row(tok: str) -> int:
+        r = int(tok)
+        if not 0 <= r < num_rows:
+            raise ValueError(
+                f"row index {r} out of range [0, {num_rows})")
+        return r
+
     if op == OP_ISSUE:
         return PimOp(op)
     if op in (OP_ROWCLONE, OP_DRA):
-        return PimOp(op, a=int(toks[1]), b=int(toks[2]))
+        return PimOp(op, a=row(toks[1]), b=row(toks[2]))
     if op == OP_TRA:
-        return PimOp(op, a=int(toks[1]), b=int(toks[2]), c=int(toks[3]))
+        return PimOp(op, a=row(toks[1]), b=row(toks[2]), c=row(toks[3]))
     if op == OP_NOT2DCC:
-        return PimOp(op, a=int(toks[1]))
+        return PimOp(op, a=row(toks[1]))
     if op == OP_DCC2:
-        return PimOp(op, b=int(toks[1]))
+        return PimOp(op, b=row(toks[1]))
     if op == OP_SHIFT:
-        return PimOp(op, a=int(toks[1]), b=int(toks[2]), delta=int(toks[3]))
-    if op == OP_WRITE:
-        row = np.frombuffer(bytes.fromhex(toks[2]), dtype="<u4")
-        if row.shape != (words,):
+        delta = int(toks[3])
+        if delta not in (1, -1):
             raise ValueError(
-                f"HOSTW payload is {row.size} words, trace declares {words}")
-        out = PimOp(op, b=int(toks[1]), payload=len(payloads))
-        payloads.append(row.astype(np.uint32))
+                f"SHIFT delta must be +1 or -1 (1-bit migration-cell "
+                f"primitive), got {delta:+d}")
+        return PimOp(op, a=row(toks[1]), b=row(toks[2]), delta=delta)
+    if op == OP_WRITE:
+        payload = np.frombuffer(bytes.fromhex(toks[2]), dtype="<u4")
+        if payload.shape != (words,):
+            raise ValueError(
+                f"HOSTW payload is {payload.size} words, "
+                f"trace declares {words}")
+        out = PimOp(op, b=row(toks[1]), payload=len(payloads))
+        payloads.append(payload.astype(np.uint32))
         return out
     if op == OP_READ:
-        return PimOp(op, a=int(toks[1]))
+        return PimOp(op, a=row(toks[1]))
     assert op == OP_FILL, op
-    return PimOp(op, b=int(toks[1]), payload=int(toks[2], 16))
+    return PimOp(op, b=row(toks[1]), payload=int(toks[2], 16))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,62 +158,41 @@ class PimProgram:
         return out
 
     # -- trace import/export --------------------------------------------------
+    def _format_op(self, o: PimOp) -> str:
+        m = _MNEMONIC[o.op]
+        if o.op == OP_ISSUE:
+            return m
+        if o.op in (OP_ROWCLONE, OP_DRA):
+            return f"{m} {o.a} {o.b}"
+        if o.op == OP_TRA:
+            return f"{m} {o.a} {o.b} {o.c}"
+        if o.op == OP_NOT2DCC:
+            return f"{m} {o.a}"
+        if o.op == OP_DCC2:
+            return f"{m} {o.b}"
+        if o.op == OP_SHIFT:
+            return f"{m} {o.a} {o.b} {o.delta:+d}"
+        if o.op == OP_WRITE:
+            data = self.payloads[o.payload].astype("<u4").tobytes().hex()
+            return f"{m} {o.b} {data}"
+        if o.op == OP_READ:
+            return f"{m} {o.a}"
+        assert o.op == OP_FILL, o.op
+        return f"{m} {o.b} {o.payload:08x}"
+
     def to_trace(self) -> str:
         lines = [f"# pim-trace v1 rows={self.num_rows} words={self.words}"]
-        for o in self.ops:
-            m = _MNEMONIC[o.op]
-            if o.op == OP_ISSUE:
-                lines.append(m)
-            elif o.op in (OP_ROWCLONE, OP_DRA):
-                lines.append(f"{m} {o.a} {o.b}")
-            elif o.op == OP_TRA:
-                lines.append(f"{m} {o.a} {o.b} {o.c}")
-            elif o.op == OP_NOT2DCC:
-                lines.append(f"{m} {o.a}")
-            elif o.op == OP_DCC2:
-                lines.append(f"{m} {o.b}")
-            elif o.op == OP_SHIFT:
-                lines.append(f"{m} {o.a} {o.b} {o.delta:+d}")
-            elif o.op == OP_WRITE:
-                data = self.payloads[o.payload].astype("<u4").tobytes().hex()
-                lines.append(f"{m} {o.b} {data}")
-            elif o.op == OP_READ:
-                lines.append(f"{m} {o.a}")
-            elif o.op == OP_FILL:
-                lines.append(f"{m} {o.b} {o.payload:08x}")
+        lines.extend(self._format_op(o) for o in self.ops)
         return "\n".join(lines) + "\n"
 
     @classmethod
     def from_trace(cls, text: str) -> "PimProgram":
-        num_rows, words = NUM_ROWS, ROW_WORDS
-        ops: list[PimOp] = []
-        payloads: list[np.ndarray] = []
-        for raw in text.splitlines():
-            line = raw.split("//")[0].strip()
-            if line.startswith("#"):
-                if "pim-trace" in line:
-                    for tok in line.split():
-                        if tok.startswith("rows="):
-                            num_rows = int(tok[5:])
-                        elif tok.startswith("words="):
-                            words = int(tok[6:])
-                continue
-            if not line:
-                continue
-            toks = line.split()
-            if toks[0] == "PIM":      # HBM-PIMulator-style prefix is accepted
-                toks = toks[1:]
-            name = toks[0].upper() if toks else ""
-            if name not in _FROM_MNEMONIC:
-                raise ValueError(f"unknown trace mnemonic: {raw!r}")
-            op = _FROM_MNEMONIC[name]
-            try:
-                ops.append(_parse_operands(op, toks, payloads, words))
-            except (IndexError, ValueError) as e:
-                raise ValueError(
-                    f"malformed operands on trace line {raw!r}: {e}") from e
-        return cls(ops=tuple(ops), num_rows=num_rows, words=words,
-                   payloads=tuple(payloads))
+        programs = from_trace_banks(text)
+        if len(programs) != 1:
+            raise ValueError(
+                f"trace holds {len(programs)} banks; use "
+                "from_trace_banks for multi-bank (pim-trace v2) traces")
+        return programs[0]
 
     def save_trace(self, path) -> None:
         with open(path, "w") as f:
@@ -199,6 +202,83 @@ class PimProgram:
     def load_trace(cls, path) -> "PimProgram":
         with open(path) as f:
             return cls.from_trace(f.read())
+
+
+def to_trace_banks(programs: "Iterable[PimProgram]") -> str:
+    """Export per-bank programs as a ``pim-trace v2`` text.
+
+    Every command line carries a ``BANK <b>`` prefix; the header records the
+    bank count. All banks must share one subarray shape (the device model's
+    invariant). Single-program exports stay ``to_trace`` (v1) — v2 is the
+    superset format for device-level streams.
+    """
+    programs = list(programs)
+    assert programs, "need at least one per-bank program"
+    rows, words = programs[0].num_rows, programs[0].words
+    for p in programs:
+        assert (p.num_rows, p.words) == (rows, words), \
+            "banks must share one subarray shape"
+    lines = [f"# pim-trace v2 rows={rows} words={words} "
+             f"banks={len(programs)}"]
+    for b, p in enumerate(programs):
+        lines.extend(f"BANK {b} {p._format_op(o)}" for o in p.ops)
+    return "\n".join(lines) + "\n"
+
+
+def from_trace_banks(text: str) -> tuple[PimProgram, ...]:
+    """Parse a ``pim-trace`` text into per-bank programs.
+
+    Accepts v1 (no ``BANK`` prefixes → one program) and v2 (``banks=N``
+    header, ``BANK <b>`` prefixed command lines; unprefixed lines fall to
+    bank 0). Malformed lines raise line-numbered ``ValueError``s.
+    """
+    num_rows, words, banks = NUM_ROWS, ROW_WORDS, 1
+    ops: dict[int, list[PimOp]] = {}
+    payloads: dict[int, list[np.ndarray]] = {}
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.split("//")[0].strip()
+        if line.startswith("#"):
+            if "pim-trace" in line:
+                for tok in line.split():
+                    if tok.startswith("rows="):
+                        num_rows = int(tok[5:])
+                    elif tok.startswith("words="):
+                        words = int(tok[6:])
+                    elif tok.startswith("banks="):
+                        banks = int(tok[6:])
+                        if banks < 1:
+                            raise ValueError(
+                                f"trace line {lineno}: banks={banks} "
+                                "must be >= 1")
+            continue
+        if not line:
+            continue
+        toks = line.split()
+        if toks[0] == "PIM":      # HBM-PIMulator-style prefix is accepted
+            toks = toks[1:]
+        bank = 0
+        try:
+            if toks and toks[0].upper() == "BANK":
+                bank = int(toks[1])
+                toks = toks[2:]
+                if not 0 <= bank < banks:
+                    raise ValueError(
+                        f"bank {bank} out of range [0, {banks}) — is the "
+                        "header's banks= count right?")
+            name = toks[0].upper() if toks else ""
+            if name not in _FROM_MNEMONIC:
+                raise ValueError(f"unknown trace mnemonic {name!r}")
+            op = _FROM_MNEMONIC[name]
+            ops.setdefault(bank, []).append(_parse_operands(
+                op, toks, payloads.setdefault(bank, []), words, num_rows))
+        except (IndexError, ValueError) as e:
+            msg = "missing operand(s)" if isinstance(e, IndexError) else e
+            raise ValueError(
+                f"trace line {lineno} ({raw.strip()!r}): {msg}") from e
+    return tuple(
+        PimProgram(ops=tuple(ops.get(b, ())), num_rows=num_rows, words=words,
+                   payloads=tuple(payloads.get(b, ())))
+        for b in range(banks))
 
 
 class ProgramBuilder:

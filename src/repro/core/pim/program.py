@@ -114,6 +114,11 @@ def bank_parallel(fn: Callable | PimProgram | CompiledProgram, n_banks: int,
     Given a recorded/compiled program, ONE compiled artifact is vmapped
     across a bank batch of states (states in, (states, wall, energy) out).
     A plain callable keeps the legacy row-in, state-out contract.
+
+    This is the homogeneous fast path (no command-bus model, identical
+    payloads). For heterogeneous per-bank programs, per-bank HOSTW data,
+    and bus-serialized device timing, use ``device.make_device`` +
+    ``schedule.schedule`` (DESIGN.md §7).
     """
     if isinstance(fn, (PimProgram, CompiledProgram)):
         from . import exec as pim_exec

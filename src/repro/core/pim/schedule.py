@@ -1,0 +1,207 @@
+"""Workload scheduler for device-level (multi-bank) PIM execution.
+
+Takes *heterogeneous* per-bank :class:`~.ir.PimProgram`s and executes them
+against a :class:`~.device.DeviceState` with as few compiled artifacts as
+possible: banks whose command streams are identical (same ops, shape and
+payload count — payload *data* may differ) form one group, and each group
+runs as ONE compiled runner vmapped over the group's bank states with the
+HOSTW payloads passed as a batched argument (``exec.make_runner``'s
+``payload_arg`` mode). This is SIMDRAM's framework split — program →
+allocation → execution — with Shared-PIM-style concurrent bank scheduling.
+
+Device accounting (see ``device.py``): per-bank meters accumulate each
+bank's own busy time; the schedule-level wall clock is
+
+    wall = Σ_b bus_b  +  max_b (Δtime_b − bus_b)        energy = Σ_b Δenergy_b
+
+where ``bus_b`` is bank b's serialized per-burst ``ISSUE`` occupancy.
+
+``shard_rows`` / ``shard_lanes`` partition one large host buffer into
+per-bank programs (row-wise or lane-wise), the building blocks the
+benchmarks and ``bitplane.PimVM``'s ``n_banks`` mode use to scatter a
+multi-KB workload over the paper's 32 banks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import exec as pim_exec
+from . import ir
+from .compile import CompiledProgram, compile_program
+from .device import DeviceState, bus_time_ns, device_wall_ns
+from .ir import PimProgram, ProgramBuilder
+from .state import NUM_ROWS
+from .timing import DDR3Timing
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    """Outcome of one device-level schedule step."""
+
+    state: DeviceState
+    wall_ns: jax.Array          # bus serialization + max in-bank exec
+    bus_ns: jax.Array           # serialized command-bus occupancy
+    energy_nj: jax.Array        # summed across banks (this step only)
+    reads: tuple                # per bank: host-read rows in slot order
+
+
+def stream_key(p: PimProgram):
+    """Banks with equal keys share one compiled vmapped runner: identical
+    command stream and shape; HOSTW payload *data* is excluded (it is passed
+    per-bank at run time)."""
+    return (p.ops, p.num_rows, p.words, len(p.payloads))
+
+
+# One compiled artifact per distinct (stream, timing): groups recur across
+# schedule() calls (e.g. PimVM flushes), so keep the jitted runners warm.
+# FIFO-bounded — long sessions stream many one-off programs through here.
+_compile_cache: dict = {}
+_COMPILE_CACHE_MAX = 512
+
+
+def _compiled_for(program: PimProgram, timing: DDR3Timing) -> CompiledProgram:
+    key = (stream_key(program), timing)
+    if key not in _compile_cache:
+        if len(_compile_cache) >= _COMPILE_CACHE_MAX:
+            _compile_cache.pop(next(iter(_compile_cache)))
+        _compile_cache[key] = compile_program(program, timing)
+    return _compile_cache[key]
+
+
+def _payload_stack(programs: Sequence[PimProgram], words: int) -> jnp.ndarray:
+    """(n_banks_in_group, n_payloads, words) uint32 HOSTW payload batch."""
+    n_pay = len(programs[0].payloads)
+    if n_pay == 0:
+        return jnp.zeros((len(programs), 0, words), jnp.uint32)
+    return jnp.asarray(np.stack(
+        [np.stack(p.payloads) for p in programs]).astype(np.uint32))
+
+
+def schedule(device: DeviceState,
+             programs: Sequence[PimProgram | None], *,
+             use_kernels: bool | None = None,
+             interpret: bool | None = None,
+             refresh: bool = False) -> ScheduleResult:
+    """Run one program per bank (``None`` = idle bank) and fold the device
+    timing model over the per-bank meters.
+
+    ``refresh`` folds periodic-refresh stalls/energy into each bank's meter
+    (``timing.apply_refresh``). It recounts from the bank's *cumulative*
+    busy time, so only use it on single-shot runs against fresh devices —
+    repeated refreshed schedules on one device would double-count events.
+    """
+    cfg = device.config
+    if len(programs) != cfg.n_banks:
+        raise ValueError(
+            f"got {len(programs)} programs for {cfg.n_banks} banks")
+    for b, p in enumerate(programs):
+        if p is not None and (p.num_rows, p.words) != (cfg.num_rows,
+                                                       cfg.words):
+            raise ValueError(
+                f"bank {b}: program shape {(p.num_rows, p.words)} != device "
+                f"shape {(cfg.num_rows, cfg.words)}")
+
+    groups: dict = {}
+    for b, p in enumerate(programs):
+        if p is not None and len(p.ops):
+            groups.setdefault(stream_key(p), []).append(b)
+
+    banks = device.banks
+    t0 = jnp.asarray(banks.meter.time_ns)
+    e0 = jnp.asarray(banks.meter.total_energy_nj)
+    new_banks = banks
+    reads: list[tuple] = [() for _ in range(cfg.n_banks)]
+    bus = np.zeros(cfg.n_banks, np.float32)
+
+    for key, bank_ids in groups.items():
+        group_progs = [programs[b] for b in bank_ids]
+        compiled = _compiled_for(group_progs[0], cfg.timing)
+        runner = pim_exec.make_runner(
+            compiled, cfg.timing, use_kernels=use_kernels,
+            interpret=interpret, refresh=refresh, payload_arg=True)
+        idx = jnp.asarray(bank_ids)
+        sub = jax.tree_util.tree_map(lambda x: x[idx], banks)
+        out, group_reads = jax.vmap(runner.traced)(
+            sub, _payload_stack(group_progs, cfg.words))
+        new_banks = jax.tree_util.tree_map(
+            lambda full, upd: full.at[idx].set(upd), new_banks, out)
+        group_bus = bus_time_ns(group_progs[0], cfg.timing)
+        for j, b in enumerate(bank_ids):
+            reads[b] = tuple(r[j] for r in group_reads)
+            bus[b] = group_bus
+
+    t1 = jnp.asarray(new_banks.meter.time_ns)
+    e1 = jnp.asarray(new_banks.meter.total_energy_nj)
+    bus_j = jnp.asarray(bus)
+    exec_ns = t1 - t0 - bus_j
+    return ScheduleResult(
+        state=device.with_banks(new_banks),
+        wall_ns=device_wall_ns(bus_j, exec_ns),
+        bus_ns=jnp.sum(bus_j),
+        energy_nj=jnp.sum(e1 - e0),
+        reads=tuple(reads))
+
+
+# ---------------------------------------------------------------------------
+# Host-buffer partitioners: one large buffer → per-bank programs
+# ---------------------------------------------------------------------------
+
+BuildFn = Callable[[ProgramBuilder, list[int]], None]
+
+
+def _chunk_program(chunk: np.ndarray, num_rows: int, words: int,
+                   build: BuildFn | None, read_back: bool) -> PimProgram:
+    b = ProgramBuilder(num_rows, words)
+    b.issue()
+    rows = list(range(chunk.shape[0]))
+    for r in rows:
+        b.write_row(r, chunk[r])
+    if build is not None:
+        build(b, rows)
+    if read_back:
+        for r in rows:
+            b.read_row(r)
+    return b.build()
+
+
+def shard_rows(data: np.ndarray, n_banks: int, num_rows: int = NUM_ROWS, *,
+               build: BuildFn | None = None,
+               read_back: bool = False) -> list[PimProgram]:
+    """Split a ``(R, words)`` row buffer row-wise across ``n_banks``.
+
+    Bank ``b`` receives a contiguous chunk of rows, HOSTW-written to its rows
+    ``0..k-1`` after one ISSUE burst; ``build(builder, local_rows)`` then
+    appends the per-bank compute. Chunks are ``np.array_split``-balanced, so
+    R need not divide evenly (trailing banks may be one row short or idle).
+    """
+    data = np.asarray(data, dtype=np.uint32)
+    assert data.ndim == 2, data.shape
+    chunks = np.array_split(data, n_banks, axis=0)
+    return [_chunk_program(c, num_rows, data.shape[1], build, read_back)
+            for c in chunks]
+
+
+def shard_lanes(data: np.ndarray, n_banks: int, num_rows: int = NUM_ROWS, *,
+                build: BuildFn | None = None,
+                read_back: bool = False) -> list[PimProgram]:
+    """Split a ``(R, words)`` row buffer lane-wise across ``n_banks``.
+
+    Bank ``b`` receives the word-slice ``[:, b*w:(b+1)*w]`` of every row
+    (``w = words // n_banks``) — all banks then run the SAME command stream
+    over different columns, the natural SIMD split for element-parallel
+    workloads (element width must divide 32 so lanes never straddle the
+    word-slice boundary).
+    """
+    data = np.asarray(data, dtype=np.uint32)
+    assert data.ndim == 2, data.shape
+    words = data.shape[1]
+    if words % n_banks:
+        raise ValueError(f"words={words} not divisible by n_banks={n_banks}")
+    w = words // n_banks
+    chunks = [data[:, b * w:(b + 1) * w] for b in range(n_banks)]
+    return [_chunk_program(c, num_rows, w, build, read_back) for c in chunks]

@@ -1,0 +1,339 @@
+"""Device-level invariants: scheduler wall/energy algebra, heterogeneous
+grouping, pim-trace v2 round-trips, trace import validation, the
+value-keyed runner cache, and PimVM lane sharding.
+
+The acceptance bar mirrors test_pim_ir.py: device runs must be *bit-exact*
+against per-bank single-subarray executions — same bits, same reads — while
+the device wall clock follows  wall = Σ bus + max(Δt − bus)  and energy sums
+across banks.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import pim
+from repro.core.bitplane import PimVM, gf, rs
+from repro.core.pim import exec as pim_exec
+from repro.core.pim import ir
+
+WORDS = 8
+ROWS = 32
+
+
+def _rand_row(rng, words=WORDS):
+    return rng.integers(0, 2**32, (words,), dtype=np.uint32)
+
+
+def _shift_prog(data, k, rows=ROWS, words=WORDS):
+    b = pim.ProgramBuilder(rows, words)
+    b.issue()
+    b.write_row(0, data)
+    b.shift_k(0, 1, k)
+    b.read_row(1)
+    return b.build()
+
+
+def _xor_prog(d1, d2, rows=ROWS, words=WORDS):
+    b = pim.ProgramBuilder(rows, words)
+    b.issue()
+    b.write_row(0, d1)
+    b.write_row(1, d2)
+    b.ambit_xor(0, 1, 2)
+    b.read_row(2)
+    return b.build()
+
+
+def _single_ref(prog):
+    """Per-bank reference: the same program on one fresh subarray."""
+    st = pim.reserve_control_rows(pim.make_subarray(prog.num_rows,
+                                                    prog.words))
+    return pim_exec.execute(prog, st)
+
+
+def _device(n_banks, rows=ROWS, words=WORDS):
+    return pim.make_device(pim.DeviceConfig(
+        channels=1, ranks=1, banks_per_rank=n_banks,
+        num_rows=rows, words=words))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler algebra
+# ---------------------------------------------------------------------------
+
+def test_schedule_heterogeneous_matches_per_bank_reference():
+    """wall = Σ bus + max(exec), energy = Σ, bits/reads bit-exact — for
+    programs with different streams AND same-stream/different-payload
+    banks (which share one vmapped runner)."""
+    rng = np.random.default_rng(0)
+    d = [_rand_row(rng) for _ in range(4)]
+    progs = [_shift_prog(d[0], 5), _shift_prog(d[1], 5),
+             _xor_prog(d[2], d[3]), None]
+    res = pim.schedule(_device(4), progs)
+
+    walls, buses, energy = [], [], 0.0
+    for b, p in enumerate(progs):
+        if p is None:
+            assert res.reads[b] == ()
+            continue
+        ref = _single_ref(p)
+        assert np.array_equal(np.asarray(ref.state.bits),
+                              np.asarray(res.state.bank(b).bits)), b
+        assert len(ref.reads) == len(res.reads[b])
+        for x, y in zip(ref.reads, res.reads[b]):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), b
+        walls.append(float(ref.state.meter.time_ns))
+        buses.append(pim.bus_time_ns(p))
+        energy += float(ref.state.meter.total_energy_nj)
+
+    expect_wall = sum(buses) + max(w - bu for w, bu in zip(walls, buses))
+    assert float(res.wall_ns) == pytest.approx(expect_wall, rel=1e-6)
+    assert float(res.bus_ns) == pytest.approx(sum(buses), rel=1e-6)
+    assert float(res.energy_nj) == pytest.approx(energy, rel=1e-5)
+
+
+def test_schedule_single_bank_degenerates_to_subarray_meter():
+    rng = np.random.default_rng(1)
+    prog = _shift_prog(_rand_row(rng), 7)
+    res = pim.schedule(_device(1), [prog])
+    ref = _single_ref(prog)
+    assert float(res.wall_ns) == pytest.approx(
+        float(ref.state.meter.time_ns), rel=1e-6)
+    assert float(res.energy_nj) == pytest.approx(
+        float(ref.state.meter.total_energy_nj), rel=1e-5)
+
+
+def test_schedule_same_stream_banks_group_into_one_runner():
+    """Same ops + different payloads must share one compiled artifact."""
+    rng = np.random.default_rng(2)
+    progs = [_shift_prog(_rand_row(rng), 3) for _ in range(3)]
+    keys = {pim.stream_key(p) for p in progs}
+    assert len(keys) == 1
+    res = pim.schedule(_device(3), progs)
+    for b, p in enumerate(progs):
+        ref = _single_ref(p)
+        assert np.array_equal(np.asarray(ref.reads[0]),
+                              np.asarray(res.reads[b][0]))
+
+
+def test_schedule_validates_shapes_and_count():
+    dev = _device(2)
+    with pytest.raises(ValueError, match="programs for"):
+        pim.schedule(dev, [None])
+    bad = pim.ProgramBuilder(ROWS, WORDS * 2).issue().build()
+    with pytest.raises(ValueError, match="shape"):
+        pim.schedule(dev, [bad, None])
+
+
+def test_schedule_meters_accumulate_across_calls():
+    rng = np.random.default_rng(3)
+    dev = _device(2)
+    prog = _shift_prog(_rand_row(rng), 4)
+    r1 = pim.schedule(dev, [prog, prog])
+    r2 = pim.schedule(r1.state, [prog, prog])
+    t = np.asarray(r2.state.banks.meter.time_ns)
+    ref = _single_ref(prog)
+    assert np.allclose(t, 2 * float(ref.state.meter.time_ns), rtol=1e-6)
+    # per-call wall/energy are deltas, not cumulative
+    assert float(r2.wall_ns) == pytest.approx(float(r1.wall_ns), rel=1e-6)
+    assert float(r2.energy_nj) == pytest.approx(float(r1.energy_nj),
+                                                rel=1e-5)
+
+
+def test_paper_device_topologies():
+    assert pim.paper_device(1).n_banks == 1
+    assert pim.paper_device(8).n_banks == 8
+    d32 = pim.paper_device(32)
+    assert (d32.channels, d32.ranks, d32.banks_per_rank) == (2, 2, 8)
+    assert d32.bank_coords(0) == (0, 0, 0)
+    assert d32.bank_coords(31) == (1, 1, 7)
+    with pytest.raises(ValueError, match="n_banks"):
+        pim.paper_device(3)
+
+
+# ---------------------------------------------------------------------------
+# Partitioners
+# ---------------------------------------------------------------------------
+
+def test_shard_rows_round_trips_buffer():
+    rng = np.random.default_rng(4)
+    data = rng.integers(0, 2**32, (10, WORDS), dtype=np.uint32)
+    progs = pim.shard_rows(data, 4, num_rows=ROWS, read_back=True)
+    assert len(progs) == 4
+    res = pim.schedule(_device(4), progs)
+    got = np.concatenate(
+        [np.stack([np.asarray(r) for r in res.reads[b]])
+         for b in range(4) if res.reads[b]])
+    assert np.array_equal(got, data)
+
+
+def test_shard_lanes_matches_full_width_compute():
+    """A lane-sharded xor equals the same xor on the unsharded buffer."""
+    rng = np.random.default_rng(5)
+    data = rng.integers(0, 2**32, (2, WORDS * 4), dtype=np.uint32)
+
+    def build(b, rows):
+        b.ambit_xor(rows[0], rows[1], 2)
+        b.read_row(2)
+
+    progs = pim.shard_lanes(data, 4, num_rows=ROWS, build=build)
+    assert all(p.words == WORDS for p in progs)
+    res = pim.schedule(_device(4, words=WORDS), progs)
+    got = np.concatenate([np.asarray(res.reads[b][0]) for b in range(4)])
+    assert np.array_equal(got, data[0] ^ data[1])
+    with pytest.raises(ValueError, match="divisible"):
+        pim.shard_lanes(data, 3)
+
+
+# ---------------------------------------------------------------------------
+# pim-trace v2
+# ---------------------------------------------------------------------------
+
+def test_trace_v2_round_trip_bit_exact():
+    """BANK-prefixed round-trip preserves ops AND payloads; the re-imported
+    device run matches per-bank single-subarray executions bit-exactly."""
+    rng = np.random.default_rng(6)
+    d = [_rand_row(rng) for _ in range(3)]
+    progs = [_shift_prog(d[0], 4), _shift_prog(d[1], 9),
+             _xor_prog(d[1], d[2])]
+    text = pim.to_trace_banks(progs)
+    assert text.splitlines()[0].startswith("# pim-trace v2")
+    rt = pim.from_trace_banks(text)
+    assert len(rt) == 3
+    for p, q in zip(progs, rt):
+        assert p.ops == q.ops
+        assert all(np.array_equal(x, y)
+                   for x, y in zip(p.payloads, q.payloads))
+    res = pim.schedule(_device(3), list(rt))
+    for b, p in enumerate(progs):
+        ref = _single_ref(p)
+        assert np.array_equal(np.asarray(ref.state.bits),
+                              np.asarray(res.state.bank(b).bits)), b
+        for x, y in zip(ref.reads, res.reads[b]):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), b
+
+
+def test_trace_v1_accepts_v2_rejects_multibank():
+    rng = np.random.default_rng(7)
+    progs = [_shift_prog(_rand_row(rng), 2)] * 2
+    with pytest.raises(ValueError, match="from_trace_banks"):
+        pim.PimProgram.from_trace(pim.to_trace_banks(progs))
+    # v1 text through from_trace_banks → one bank
+    (one,) = pim.from_trace_banks(progs[0].to_trace())
+    assert one.ops == progs[0].ops
+
+
+def test_trace_v2_empty_bank_round_trips():
+    progs = [pim.ProgramBuilder(ROWS, WORDS).issue().build(),
+             pim.ProgramBuilder(ROWS, WORDS).build()]     # bank 1 idle
+    rt = pim.from_trace_banks(pim.to_trace_banks(progs))
+    assert len(rt) == 2 and rt[1].ops == ()
+
+
+# ---------------------------------------------------------------------------
+# Trace import validation (bugfix: invalid operands used to mis-execute)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("line,match", [
+    ("SHIFT 0 1 +3", r"delta must be \+1 or -1"),
+    ("SHIFT 0 1 0", r"delta must be \+1 or -1"),
+    ("AAP 16 0", "out of range"),
+    ("AAP 0 -1", "out of range"),
+    ("TRA 0 1 99", "out of range"),
+    ("HOSTR 16", "out of range"),
+    ("TRA 0 1", "missing operand"),
+    ("FROB 0 1", "unknown trace mnemonic"),
+])
+def test_from_trace_rejects_malformed_lines(line, match):
+    text = f"# pim-trace v1 rows=16 words=8\nISSUE\n{line}\n"
+    with pytest.raises(ValueError, match=match):
+        pim.PimProgram.from_trace(text)
+    with pytest.raises(ValueError, match="trace line 3"):
+        pim.PimProgram.from_trace(text)
+
+
+def test_from_trace_rejects_bad_bank_and_payload():
+    with pytest.raises(ValueError, match=r"bank 5 out of range"):
+        pim.from_trace_banks(
+            "# pim-trace v2 rows=16 words=8 banks=2\nBANK 5 ISSUE\n")
+    with pytest.raises(ValueError, match="payload"):
+        pim.PimProgram.from_trace(
+            "# pim-trace v1 rows=16 words=8\nHOSTW 0 00000000\n")
+
+
+def test_from_trace_still_accepts_valid_edge_rows():
+    text = "# pim-trace v1 rows=16 words=8\nAAP 0 15\nSHIFT 15 0 -1\n"
+    prog = pim.PimProgram.from_trace(text)
+    assert prog.ops[0].b == 15 and prog.ops[1].delta == -1
+
+
+# ---------------------------------------------------------------------------
+# Runner cache keying (bugfix: id(cfg) aliasing)
+# ---------------------------------------------------------------------------
+
+def test_runner_cache_keys_on_timing_value_not_id():
+    """Equal-but-distinct cfgs must share a cache entry; a cfg with
+    different constants must NOT reuse a stale runner (the old id(cfg) key
+    could alias after garbage collection)."""
+    prog = pim.shift_workload_program(40, 16, WORDS)   # > tREFI: refreshes
+    cfg_a = pim.DDR3Timing()
+    compiled = pim.compile_program(prog, cfg_a)
+    r_a = pim_exec.make_runner(compiled, cfg_a, refresh=True)
+    # equal value, distinct instance → cache hit
+    cfg_a2 = pim.DDR3Timing()
+    assert cfg_a2 is not cfg_a
+    assert pim_exec.make_runner(compiled, cfg_a2, refresh=True) is r_a
+    # different refresh constants → different runner AND different meter
+    cfg_b = dataclasses.replace(cfg_a, tRFC=2600.0, e_ref=800.0)
+    r_b = pim_exec.make_runner(compiled, cfg_b, refresh=True)
+    assert r_b is not r_a
+    st = pim.make_subarray(16, WORDS)
+    m_a = r_a(st).state.meter
+    m_b = r_b(st).state.meter
+    assert int(m_a.n_refresh) >= 1
+    assert float(m_b.time_ns) > float(m_a.time_ns)
+    assert float(m_b.e_refresh) > float(m_a.e_refresh)
+
+
+# ---------------------------------------------------------------------------
+# PimVM lane sharding
+# ---------------------------------------------------------------------------
+
+def test_pimvm_sharded_gf_mul_bit_exact():
+    rng = np.random.default_rng(8)
+    vm1 = PimVM(width=8, num_rows=96, words=16)
+    vm4 = PimVM(width=8, num_rows=96, words=16, n_banks=4)
+    a = rng.integers(0, 256, vm1.lanes)
+    b = rng.integers(0, 256, vm1.lanes)
+    got1 = vm1.read(gf.gf_mul(vm1, vm1.load(a), vm1.load(b)))
+    got4 = vm4.read(gf.gf_mul(vm4, vm4.load(a), vm4.load(b)))
+    assert np.array_equal(got1, got4)
+    assert np.array_equal(got1, gf.ref_gf_mul(a, b))
+    # homogeneous streams, no ISSUE bursts: wall == any bank's meter time
+    t = np.asarray(vm4._device.banks.meter.time_ns)
+    assert np.allclose(t, t[0])
+    assert vm4.time_ns == pytest.approx(float(t[0]), rel=1e-6)
+    assert vm4.energy_nj == pytest.approx(
+        float(jnp.sum(vm4._device.banks.meter.total_energy_nj)), rel=1e-6)
+
+
+def test_pimvm_sharded_rs_encode_bit_exact():
+    rng = np.random.default_rng(9)
+    k, npar = 4, 2
+    vm1 = PimVM(width=8, num_rows=120, words=8)
+    vm2 = PimVM(width=8, num_rows=120, words=8, n_banks=2)
+    msg = rng.integers(0, 256, size=(k, vm1.lanes))
+    p1 = rs.rs_encode(vm1, [vm1.load(msg[i]) for i in range(k)], npar)
+    p2 = rs.rs_encode(vm2, [vm2.load(msg[i]) for i in range(k)], npar)
+    got1 = np.stack([vm1.read(r) for r in p1])
+    got2 = np.stack([vm2.read(r) for r in p2])
+    assert np.array_equal(got1, got2)
+    assert np.array_equal(got1, rs.ref_rs_encode(msg, npar))
+
+
+def test_pimvm_sharded_rejects_bad_config():
+    with pytest.raises(AssertionError):
+        PimVM(width=8, words=16, n_banks=3)      # 16 % 3 != 0
+    with pytest.raises(AssertionError):
+        PimVM(width=8, words=16, n_banks=2, eager=True)
