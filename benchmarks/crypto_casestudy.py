@@ -3,10 +3,16 @@ shift-and-add multiply, AES xtime and Reed-Solomon encode — DDR3-modeled
 time/energy per operation on full 8KB rows — then RS(12,8) at device level:
 the codeword buffer lane-sharded across 1/8/32 banks through the workload
 scheduler, bit-exact against the single-subarray reference, with the
-paper's §5.1.4 linear throughput scaling."""
+paper's §5.1.4 linear throughput scaling. Finally, the LISA-COPY workload:
+RS(12,8) syndrome rows from all 32 banks XOR-reduced into bank 0 entirely
+in-DRAM (zero HOSTR/HOSTW bytes in the reduction phase), bit-exact against
+the single-subarray reference."""
+import json
+
 import numpy as np
 
-from repro.core.bitplane import PimVM, arith, gf, rs
+from repro.core import pim
+from repro.core.bitplane import PimVM, arith, gf, layout, rs
 
 from .common import timed
 
@@ -87,6 +93,122 @@ def run(report=print):
                         for r in rs.rs_encode(vm_ref, regs, npar)])
     assert np.array_equal(got, ref_par), "sharded != single-subarray"
     report("32-bank parity bit-exact vs single-subarray reference: OK")
+
+    rows_out.extend(_syndrome_reduction(report))
+    return rows_out
+
+
+def _syndrome_reduction(report, banks=32, k=8, npar=4, words=64,
+                        vm_rows=120):
+    """RS(12,8) syndrome reduction across ``banks`` banks via LISA COPY.
+
+    Every bank holds 12 codeword rows (8 data + 4 parity) for its own lane
+    chunk and evaluates its 4 syndrome rows in-DRAM; a log2(banks)-round
+    binary tree then XOR-reduces all syndrome rows into bank 0 — row
+    movement exclusively via inter-bank ``COPY``, so the reduction phase
+    moves ZERO host bytes. The reduced rows are a device-wide integrity
+    checksum (zero iff no bank saw corruption); a few banks get flipped
+    bytes so the checksum is non-trivial. Bit-exact against running every
+    bank's recorded program on a single subarray and XORing on the host.
+    """
+    rng = np.random.default_rng(12)
+    lanes = words * 32 // 8
+    rows_out = []
+
+    # Per-bank recorded programs: load codeword, evaluate syndromes.
+    progs, oracle_syn, syn_rows, recv_rows = [], [], None, None
+    for b in range(banks):
+        vm = PimVM(width=8, num_rows=vm_rows, words=words)
+        msg = rng.integers(0, 256, size=(k, lanes))
+        par = rs.ref_rs_encode(msg, npar)
+        cw = np.concatenate([msg.astype(np.uint64), par[::-1]],
+                            axis=0)                     # highest degree first
+        if b % 5 == 0:                                   # inject corruption
+            cw[rng.integers(0, k + npar), rng.integers(0, lanes)] ^= 0x5A
+        regs = [vm.load(cw[i]) for i in range(k + npar)]
+        syn = rs.rs_syndromes(vm, regs, npar)
+        recv = [vm.alloc() for _ in range(npar)]
+        assert syn_rows in (None, syn) and recv_rows in (None, recv), \
+            "allocation must be identical across banks (one stream group)"
+        syn_rows, recv_rows = syn, recv
+        progs.append(vm.take_recorded())
+        oracle_syn.append(rs.ref_rs_syndromes(cw, npar))
+
+    dcfg = pim.paper_device(banks, num_rows=vm_rows, words=words)
+    dev = pim.make_device(dcfg)
+
+    def run(dev=dev):
+        res = pim.schedule(dev, progs)       # compute phase (loads included)
+        state, load_bytes = res.state, res.host_bytes
+        red_wall = red_energy = red_copy = 0.0
+        red_bytes = 0
+        stride = 1
+        merge = pim.PimProgram(ops=sum(
+            (pim.xor_reduce_program(vm_rows, words, [s, r], s).ops
+             for s, r in zip(syn_rows, recv_rows)), ()),
+            num_rows=vm_rows, words=words)
+        while stride < banks:
+            moves = [((b + stride, 0, syn_rows[j]), (b, 0, recv_rows[j]))
+                     for b in range(0, banks, 2 * stride)
+                     for j in range(npar)]
+            r1 = pim.schedule(state, pim.gather_rows(dcfg, moves))
+            receivers = set(range(0, banks, 2 * stride))
+            r2 = pim.schedule(r1.state, [
+                merge if b in receivers else None for b in range(banks)])
+            for r in (r1, r2):
+                red_wall += float(r.wall_ns)
+                red_energy += float(r.energy_nj)
+                red_copy += float(r.copy_ns)
+                red_bytes += r.host_bytes
+            state = r2.state
+            stride *= 2
+        return state, load_bytes, red_wall, red_energy, red_copy, red_bytes
+
+    (state, load_bytes, red_wall, red_energy, red_copy,
+     red_bytes), us = timed(run, warmup=0, iters=1)
+    assert red_bytes == 0, "reduction phase must move zero host bytes"
+
+    got_packed = np.asarray(state.slot(0).bits)[syn_rows]
+    got = np.stack([layout.unpack_elements(got_packed[j], 8, lanes)
+                    for j in range(npar)])
+    # oracle: lane-wise XOR of every bank's reference syndromes
+    oracle = np.bitwise_xor.reduce(np.stack(oracle_syn), axis=0)
+    assert got.any(), "corrupted banks must yield a non-zero checksum"
+    assert np.array_equal(got, oracle), "device checksum != numpy oracle"
+
+    # single-subarray reference: same recorded programs, one subarray each,
+    # XOR of the syndrome rows on the host — must match COPY path bit-exactly.
+    # All banks share one stream, so ONE compiled runner takes each bank's
+    # HOSTW payloads as an argument (exec payload_arg mode).
+    runner = pim.make_runner(pim.compile_program(progs[0]), payload_arg=True)
+    ref = np.zeros_like(got_packed)
+    for p in progs:
+        st = pim.reserve_control_rows(pim.make_subarray(vm_rows, words))
+        out = runner(st, np.stack(p.payloads).astype(np.uint32))
+        ref ^= np.asarray(out.state.bits)[syn_rows]
+    assert np.array_equal(got_packed, ref), "COPY path != single-subarray"
+
+    host_before = banks * npar * words * 4   # host path: read every syn row
+    report(f"\nRS(12,8) syndrome reduction across {banks} banks "
+           f"({banks * (k + npar) * words * 4 // 1024}KB codewords):")
+    report(f"  reduction wall {red_wall / 1e3:8.1f} us "
+           f"(copy {red_copy / 1e3:.1f} us), energy {red_energy:.0f} nJ")
+    report(f"  host bytes in reduction: {red_bytes} (host-reduce path: "
+           f"{host_before}), load phase: {load_bytes}")
+    report("  checksum bit-exact vs single-subarray reference + numpy: OK")
+    report("  " + json.dumps({
+        "benchmark": "rs_syndrome_reduce", "banks": banks,
+        "host_bytes_reduction_before": host_before,
+        "host_bytes_reduction_after": red_bytes,
+        "host_bytes_load": load_bytes,
+        "reduction_wall_ns": round(red_wall, 1),
+        "reduction_copy_ns": round(red_copy, 1),
+        "reduction_energy_nj": round(red_energy, 1),
+    }, sort_keys=True))
+    rows_out.append(("crypto_rs_syndrome_reduce", us,
+                     f"red_us={red_wall / 1e3:.1f};nJ={red_energy:.0f};"
+                     f"host_B_after=0;host_B_before={host_before};"
+                     f"banks={banks}"))
     return rows_out
 
 

@@ -8,6 +8,9 @@ DESIGN.md §6/§7):
 - ``pim-trace v2`` — ``banks=N`` header plus ``BANK <b>`` line prefixes;
   replayed device-level through the workload scheduler (``pim.schedule``),
   reporting wall = bus serialization + max over banks and summed energy.
+- ``pim-trace v3`` — adds ``subarrays=S`` and ``BANK <b> SUB <s>``
+  prefixes (multi-subarray banks); ``COPY`` lines move rows between
+  subarrays/banks in-DRAM and are drained by the scheduler.
 
 Prints the analytical cost summary and the executed meter, and optionally
 re-exports the parsed program(s) (round-trip check).
@@ -43,22 +46,31 @@ def _replay_single(prog, report):
 
 
 def _replay_device(programs, report):
-    rows = programs[0].num_rows
-    words = programs[0].words
+    """programs: nested [bank][subarray] (v2 → one subarray per bank)."""
+    subarrays = len(programs[0])
+    flat = [p for bank in programs for p in bank]
+    rows = flat[0].num_rows
+    words = flat[0].words
     cfg = pim.DeviceConfig(channels=1, ranks=1,
                            banks_per_rank=len(programs),
+                           subarrays=subarrays,
                            num_rows=rows, words=words)
-    report(f"device replay: {len(programs)} banks x {rows} rows x "
-           f"{words} words")
-    for b, p in enumerate(programs):
-        report(f"  bank {b}: {len(p)} commands {p.counts()}")
-    res = pim.schedule(pim.make_device(cfg), programs)
+    report(f"device replay: {len(programs)} banks x {subarrays} "
+           f"subarray(s) x {rows} rows x {words} words")
+    for b, bank in enumerate(programs):
+        for s, p in enumerate(bank):
+            if len(p):
+                report(f"  bank {b} sub {s}: {len(p)} commands {p.counts()}")
+    res = pim.schedule(pim.make_device(cfg), [list(bank) for bank in programs])
     return {
         "n_banks": len(programs),
-        "n_commands": sum(len(p) for p in programs),
+        "n_subarrays": subarrays,
+        "n_commands": sum(len(p) for p in flat),
         "wall_ns": float(res.wall_ns),
         "bus_ns": float(res.bus_ns),
+        "copy_ns": float(res.copy_ns),
         "energy_nj": float(res.energy_nj),
+        "host_bytes": int(res.host_bytes),
         "n_reads": sum(len(r) for r in res.reads),
     }
 
@@ -66,33 +78,41 @@ def _replay_device(programs, report):
 def replay(trace_path: str | None, out_path: str | None = None,
            report=print):
     if trace_path is None:
-        programs = (pim.shift_workload_program(1000, 64, 2048),)
+        programs = ((pim.shift_workload_program(1000, 64, 2048),),)
         report("no trace given — replaying the recorded Table 2/3 workload "
-               f"(N=1000, {len(programs[0])} commands)")
+               f"(N=1000, {len(programs[0][0])} commands)")
     else:
         with open(trace_path) as f:
-            programs = pim.from_trace_banks(f.read())
-        report(f"loaded {trace_path}: {len(programs)} bank(s), "
-               f"{sum(len(p) for p in programs)} commands, "
-               f"{programs[0].num_rows} rows x {programs[0].words} words")
+            programs = pim.from_trace_device(f.read())
+        flat = [p for bank in programs for p in bank]
+        report(f"loaded {trace_path}: {len(programs)} bank(s) x "
+               f"{len(programs[0])} subarray(s), "
+               f"{sum(len(p) for p in flat)} commands, "
+               f"{flat[0].num_rows} rows x {flat[0].words} words")
 
-    if len(programs) == 1:
-        out = _replay_single(programs[0], report)
+    if len(programs) == 1 and len(programs[0]) == 1:
+        out = _replay_single(programs[0][0], report)
     else:
         out = _replay_device(programs, report)
     report(json.dumps(out, indent=2, sort_keys=True))
 
     if out_path:
-        text = (programs[0].to_trace() if len(programs) == 1
-                else pim.to_trace_banks(programs))
+        if len(programs) == 1 and len(programs[0]) == 1:
+            text = programs[0][0].to_trace()
+        elif len(programs[0]) == 1:
+            text = pim.to_trace_banks([bank[0] for bank in programs])
+        else:
+            text = pim.to_trace_device(programs)
         with open(out_path, "w") as f:
             f.write(text)
-        rt = pim.from_trace_banks(text)
-        assert tuple(p.ops for p in rt) == tuple(p.ops for p in programs), \
+        rt = pim.from_trace_device(text)
+        assert tuple(tuple(p.ops for p in bank) for bank in rt) == \
+            tuple(tuple(p.ops for p in bank) for bank in programs), \
             "trace round-trip mismatch"
         assert all(
             np.array_equal(x, y)
-            for p, q in zip(rt, programs)
+            for bank_p, bank_q in zip(rt, programs)
+            for p, q in zip(bank_p, bank_q)
             for x, y in zip(p.payloads, q.payloads)), \
             "trace payload round-trip mismatch"
         report(f"wrote {out_path} (round-trip verified)")

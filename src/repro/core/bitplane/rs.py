@@ -80,6 +80,25 @@ def ref_rs_syndromes(codeword: np.ndarray, n_parity: int) -> np.ndarray:
     return out
 
 
+def rs_syndromes(vm: PimVM, cw_rows: list[int], n_parity: int) -> list[int]:
+    """In-DRAM syndrome evaluation: s_i = c(alpha^i), Horner over the
+    codeword rows (highest-degree symbol first, matching
+    ``ref_rs_syndromes``). Returns ``n_parity`` syndrome registers — all
+    zero iff every lane's codeword is valid, so the XOR of syndrome rows
+    across shards is a device-level integrity checksum."""
+    assert vm.width == 8
+    out = []
+    for i in range(n_parity):
+        alpha_i = int(_EXP[i])
+        acc = vm.zero()
+        for r in cw_rows:
+            if alpha_i != 1:
+                gf.gf_mul_const(vm, acc, alpha_i, acc, poly=gf.RS_POLY)
+            vm.xor(acc, r, acc)
+        out.append(acc)
+    return out
+
+
 def rs_encode(vm: PimVM, msg_rows: list[int], n_parity: int) -> list[int]:
     """In-DRAM LFSR encode. ``msg_rows``: registers holding symbol i of every
     lane (highest-degree first). Returns ``n_parity`` parity registers

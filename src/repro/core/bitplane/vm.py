@@ -117,6 +117,22 @@ class PimVM:
         self._builder = ProgramBuilder(self._num_rows, self.bank_words)
         self._bank_payloads = []
 
+    def take_recorded(self) -> PimProgram:
+        """Hand the pending recorded stream over WITHOUT executing it.
+
+        Device-composition hook: build a per-bank workload with the full VM
+        vocabulary (loads, masks, GF ops...), then schedule the recorded
+        program on a device slot (``pim.schedule``) instead of flushing it
+        against this VM's private state. Only meaningful before any flush —
+        a host-visible access (``read``/accounting) would have consumed the
+        stream — and only in single-bank mode (sharded VMs split payloads
+        per bank at flush time). Resets the recorder.
+        """
+        assert self.n_banks == 1, "take_recorded needs a single-bank VM"
+        prog = self._builder.build()
+        self._builder = ProgramBuilder(self._num_rows, self.words)
+        return prog
+
     # -- register management -------------------------------------------------
     def alloc(self) -> int:
         return self._free.pop()

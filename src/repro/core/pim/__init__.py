@@ -2,44 +2,50 @@
 from .state import (CostMeter, SubarrayState, make_bank, make_subarray,
                     EVEN_MASK, ODD_MASK, NUM_ROWS, ROW_BITS, ROW_WORDS,
                     WORD_BITS)
-from .timing import (DDR3Timing, DEFAULT_TIMING, apply_refresh,
-                     cpu_movement_energy_nj)
+from .timing import (DDR3Timing, DEFAULT_TIMING, apply_refresh, charge_copy,
+                     copy_cost, cpu_movement_energy_nj)
 from .isa import (C0, C1, T0, T1, T2, T3, ambit_and, ambit_maj, ambit_not,
-                  ambit_or, ambit_xor, dcc_to, dra, issue, maj3_words,
-                  not_to_dcc, read_row, reserve_control_rows, rowclone, shift,
-                  shift_row_words, tra, write_row)
+                  ambit_or, ambit_xor, dcc_to, dra, issue, lisa_copy,
+                  maj3_words, not_to_dcc, read_row, reserve_control_rows,
+                  rowclone, run_program, shift, shift_row_words, tra,
+                  write_row)
 from .program import (bank_parallel, estimate_cost, run_shift_workload,
                       shift_k, shift_workload_program)
-from .ir import (PimOp, PimProgram, ProgramBuilder, from_trace_banks,
-                 record, to_trace_banks)
+from .ir import (COPY_SELF, PimOp, PimProgram, ProgramBuilder,
+                 decode_payload, from_trace_banks, from_trace_device, record,
+                 rle_encode_payload, to_trace_banks, to_trace_device)
 from .compile import (CompiledProgram, compile_program, cost_pass,
                       cost_summary, dead_copy_elimination, fuse)
 from .exec import ExecResult, execute, make_runner
 from .device import (DeviceConfig, DeviceState, bus_time_ns, device_wall_ns,
                      make_device, paper_device)
-from .schedule import (ScheduleResult, schedule, shard_lanes, shard_rows,
-                       stream_key)
+from .schedule import (ScheduleResult, gather_rows, schedule, shard_lanes,
+                       shard_rows, stream_key, xor_reduce_program)
 from .variation import (PAPER_TABLE4, TECH22, Tech22nm, shift_failure_rate)
 from .area import AreaModel, PAPER_TABLE5, mim_capacitor_plate_side_um
 
 __all__ = [
     "CostMeter", "SubarrayState", "make_bank", "make_subarray",
     "EVEN_MASK", "ODD_MASK", "NUM_ROWS", "ROW_BITS", "ROW_WORDS", "WORD_BITS",
-    "DDR3Timing", "DEFAULT_TIMING", "apply_refresh", "cpu_movement_energy_nj",
+    "DDR3Timing", "DEFAULT_TIMING", "apply_refresh", "charge_copy",
+    "copy_cost", "cpu_movement_energy_nj",
     "C0", "C1", "T0", "T1", "T2", "T3", "ambit_and", "ambit_maj", "ambit_not",
-    "ambit_or", "ambit_xor", "dcc_to", "dra", "issue", "maj3_words",
-    "not_to_dcc", "read_row", "reserve_control_rows", "rowclone", "shift",
-    "shift_row_words", "tra", "write_row",
+    "ambit_or", "ambit_xor", "dcc_to", "dra", "issue", "lisa_copy",
+    "maj3_words", "not_to_dcc", "read_row", "reserve_control_rows",
+    "rowclone", "run_program", "shift", "shift_row_words", "tra", "write_row",
     "bank_parallel", "estimate_cost", "run_shift_workload", "shift_k",
     "shift_workload_program",
-    "PimOp", "PimProgram", "ProgramBuilder", "record",
-    "from_trace_banks", "to_trace_banks",
+    "COPY_SELF", "PimOp", "PimProgram", "ProgramBuilder", "record",
+    "decode_payload", "rle_encode_payload",
+    "from_trace_banks", "from_trace_device", "to_trace_banks",
+    "to_trace_device",
     "CompiledProgram", "compile_program", "cost_pass", "cost_summary",
     "dead_copy_elimination", "fuse",
     "ExecResult", "execute", "make_runner",
     "DeviceConfig", "DeviceState", "bus_time_ns", "device_wall_ns",
     "make_device", "paper_device",
-    "ScheduleResult", "schedule", "shard_lanes", "shard_rows", "stream_key",
+    "ScheduleResult", "gather_rows", "schedule", "shard_lanes", "shard_rows",
+    "stream_key", "xor_reduce_program",
     "PAPER_TABLE4", "TECH22", "Tech22nm", "shift_failure_rate",
     "AreaModel", "PAPER_TABLE5", "mim_capacitor_plate_side_um",
 ]

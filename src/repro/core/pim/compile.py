@@ -61,6 +61,14 @@ def _event_rows(op: ir.PimOp, words: int, cfg: DDR3Timing):
 
     if op.op in (ir.OP_ROWCLONE, ir.OP_NOT2DCC, ir.OP_DCC2):
         yield aap()
+    elif op.op == ir.OP_COPY:
+        if not ir.copy_is_local(op):
+            raise ValueError(
+                f"cross-subarray COPY to ({op.delta}, {op.c}) cannot be "
+                "compiled for one subarray — route it through the device "
+                "scheduler (schedule.py), which strips and applies it")
+        # timing.copy_cost(0) — a distance-0 LISA copy is exactly one AAP.
+        yield aap()
     elif op.op == ir.OP_SHIFT:
         for i in range(4):                      # charge_shift = 4 × charge_aap
             yield aap(extra_shift=int(i == 3))
@@ -235,7 +243,7 @@ class SegHost:
 
 # Residual primitives the scan interpreter understands.
 _SCANNABLE = (ir.OP_ROWCLONE, ir.OP_DRA, ir.OP_TRA, ir.OP_NOT2DCC,
-              ir.OP_DCC2, ir.OP_SHIFT)
+              ir.OP_DCC2, ir.OP_SHIFT, ir.OP_COPY)
 
 
 def _match_maj(ops, i, num_rows):

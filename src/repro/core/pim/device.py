@@ -1,24 +1,33 @@
-"""Device-level model: channels × ranks × banks over the subarray runtime.
+"""Device-level model: channels × ranks × banks × subarrays over the
+subarray runtime.
 
 The paper's §5.1.4 configuration is 2 channels × 2 ranks × 8 banks/rank =
-32 independently-operating banks, each modeled here as one
-:class:`~.state.SubarrayState`. Banks execute concurrently (separate row
-buffers and sense amplifiers) but share the command bus, so the device-level
-wall clock is
+32 independently-operating banks; each bank stacks ``subarrays`` (S)
+:class:`~.state.SubarrayState` units (SIMDRAM allocates μPrograms across
+subarrays the same way). A ``(bank, sub)`` pair is a *slot*; slots execute
+concurrently (separate row buffers and sense amplifiers) but share the
+command bus, so the device-level wall clock is
 
-    wall = bus serialization + max over banks of in-bank execution time
-    energy = sum over banks                      (the paper's constant nJ/op)
+    wall = bus serialization + max over slots of in-slot execution time
+    energy = sum over slots                      (the paper's constant nJ/op)
 
-Bus serialization charges each bank's per-burst ``ISSUE`` overhead
+Bus serialization charges each slot's per-burst ``ISSUE`` overhead
 (``DDR3Timing.t_issue``) back-to-back: the memory controller can only drive
-one command burst onto a channel at a time, while the activated banks then
-run their streams in parallel. With one bank this degenerates to exactly the
-single-subarray meter (issue + execution), which is what keeps device runs
-bit-comparable to the PR-1 executor.
+one command burst onto a channel at a time, while the activated slots then
+run their streams in parallel. With one bank of one subarray this
+degenerates to exactly the single-subarray meter (issue + execution), which
+is what keeps device runs bit-comparable to the PR-1 executor.
 
-``DeviceState`` is a registered pytree whose leaves carry a leading bank
-axis, so one compiled program vmaps across any bank subset; heterogeneous
-per-bank programs are the scheduler's job (``schedule.py``).
+Adjacent subarrays of one bank are additionally linked by LISA-style
+row-buffer movement: a ``COPY`` IR op moves a row between them at
+``timing.copy_cost`` (per-hop link latency/energy), and across banks over
+the chip's shared internal bus — never through the host. The scheduler
+(``schedule.py``) applies those transfers.
+
+``DeviceState`` is a registered pytree whose leaves carry a leading *slot*
+axis of length ``n_banks * subarrays`` (slot ``b*S + s``), so one compiled
+program vmaps across any slot subset; heterogeneous per-slot programs are
+the scheduler's job.
 """
 from __future__ import annotations
 
@@ -35,13 +44,15 @@ from .timing import DDR3Timing, DEFAULT_TIMING
 
 @dataclasses.dataclass(frozen=True)
 class DeviceConfig:
-    """A DRAM device: ``channels × ranks × banks_per_rank`` subarray-banks,
-    all sharing one subarray geometry and timing model. Frozen/hashable so
-    it can sit in pytree metadata and cache keys."""
+    """A DRAM device: ``channels × ranks × banks_per_rank`` banks of
+    ``subarrays`` subarrays each, all sharing one subarray geometry and
+    timing model. Frozen/hashable so it can sit in pytree metadata and
+    cache keys."""
 
     channels: int = 2
     ranks: int = 2
     banks_per_rank: int = 8
+    subarrays: int = 1
     num_rows: int = NUM_ROWS
     words: int = ROW_WORDS
     timing: DDR3Timing = DEFAULT_TIMING
@@ -50,6 +61,11 @@ class DeviceConfig:
     def n_banks(self) -> int:
         return self.channels * self.ranks * self.banks_per_rank
 
+    @property
+    def n_slots(self) -> int:
+        """Independently-executing units: every (bank, subarray) pair."""
+        return self.n_banks * self.subarrays
+
     def bank_coords(self, bank: int) -> tuple[int, int, int]:
         """Flat bank index → (channel, rank, bank-in-rank)."""
         assert 0 <= bank < self.n_banks, bank
@@ -57,10 +73,24 @@ class DeviceConfig:
         rk, bk = divmod(rest, self.banks_per_rank)
         return ch, rk, bk
 
+    def slot_index(self, bank: int, sub: int = 0) -> int:
+        """(bank, subarray) → flat slot index into the state's leading axis."""
+        if not 0 <= bank < self.n_banks:
+            raise ValueError(f"bank {bank} out of range [0, {self.n_banks})")
+        if not 0 <= sub < self.subarrays:
+            raise ValueError(
+                f"subarray {sub} out of range [0, {self.subarrays})")
+        return bank * self.subarrays + sub
+
+    def slot_coords(self, slot: int) -> tuple[int, int]:
+        """Flat slot index → (bank, subarray)."""
+        assert 0 <= slot < self.n_slots, slot
+        return divmod(slot, self.subarrays)
+
 
 # §5.1.4 device sizes used throughout benchmarks: 1, 8 (one rank), 32 (all).
 def paper_device(n_banks: int, num_rows: int = NUM_ROWS,
-                 words: int = ROW_WORDS,
+                 words: int = ROW_WORDS, subarrays: int = 1,
                  timing: DDR3Timing = DEFAULT_TIMING) -> DeviceConfig:
     """The paper's DDR3 topology scaled down to ``n_banks`` total banks."""
     shapes = {1: (1, 1, 1), 2: (1, 1, 2), 4: (1, 1, 4), 8: (1, 1, 8),
@@ -70,7 +100,8 @@ def paper_device(n_banks: int, num_rows: int = NUM_ROWS,
             f"n_banks must be one of {sorted(shapes)}, got {n_banks}")
     ch, rk, bk = shapes[n_banks]
     return DeviceConfig(channels=ch, ranks=rk, banks_per_rank=bk,
-                        num_rows=num_rows, words=words, timing=timing)
+                        subarrays=subarrays, num_rows=num_rows, words=words,
+                        timing=timing)
 
 
 @partial(
@@ -80,8 +111,8 @@ def paper_device(n_banks: int, num_rows: int = NUM_ROWS,
 )
 @dataclasses.dataclass
 class DeviceState:
-    """All banks of one device; every ``banks`` leaf has a leading
-    ``(n_banks,)`` axis."""
+    """All subarrays of one device; every ``banks`` leaf has a leading
+    ``(n_banks * subarrays,)`` slot axis (slot ``b*S + s``)."""
 
     banks: SubarrayState
     config: DeviceConfig
@@ -90,9 +121,23 @@ class DeviceState:
     def n_banks(self) -> int:
         return self.config.n_banks
 
+    @property
+    def n_slots(self) -> int:
+        return self.config.n_slots
+
+    def slot(self, bank: int, sub: int = 0) -> SubarrayState:
+        """One subarray's state, unbatched (host-side convenience)."""
+        i = self.config.slot_index(bank, sub)
+        return jax.tree_util.tree_map(lambda x: x[i], self.banks)
+
     def bank(self, b: int) -> SubarrayState:
-        """One bank's state, unbatched (host-side convenience)."""
-        return jax.tree_util.tree_map(lambda x: x[b], self.banks)
+        """One bank's state: unbatched for single-subarray banks (the PR-2
+        contract), a stacked ``(subarrays, ...)`` view otherwise."""
+        if self.config.subarrays == 1:
+            return self.slot(b, 0)
+        i = self.config.slot_index(b, 0)
+        return jax.tree_util.tree_map(
+            lambda x: x[i:i + self.config.subarrays], self.banks)
 
     def with_banks(self, banks: SubarrayState) -> "DeviceState":
         return DeviceState(banks=banks, config=self.config)
@@ -100,20 +145,20 @@ class DeviceState:
 
 def make_device(config: DeviceConfig, reserve: bool = True) -> DeviceState:
     """Fresh device; ``reserve`` initializes the Ambit C0/C1 control rows in
-    every bank (meter-free, as in ``isa.reserve_control_rows``)."""
+    every subarray (meter-free, as in ``isa.reserve_control_rows``)."""
     from .isa import reserve_control_rows
 
     def one(_):
         s = make_subarray(config.num_rows, config.words)
         return reserve_control_rows(s) if reserve else s
 
-    return DeviceState(banks=jax.vmap(one)(jnp.arange(config.n_banks)),
+    return DeviceState(banks=jax.vmap(one)(jnp.arange(config.n_slots)),
                        config=config)
 
 
 def bus_time_ns(program: ir.PimProgram | None,
                 timing: DDR3Timing = DEFAULT_TIMING) -> float:
-    """Command-bus occupancy of one bank's stream: its ISSUE bursts are the
+    """Command-bus occupancy of one slot's stream: its ISSUE bursts are the
     only part that serializes device-wide."""
     if program is None:
         return 0.0
@@ -122,7 +167,7 @@ def bus_time_ns(program: ir.PimProgram | None,
 
 
 def device_wall_ns(bus_ns, exec_ns) -> jnp.ndarray:
-    """wall = serialized bus traffic + slowest bank's in-bank execution."""
+    """wall = serialized bus traffic + slowest slot's in-slot execution."""
     bus_ns = jnp.asarray(bus_ns, jnp.float32)
     exec_ns = jnp.asarray(exec_ns, jnp.float32)
     return jnp.sum(bus_ns) + (jnp.max(exec_ns) if exec_ns.size

@@ -100,8 +100,8 @@ _SCAN_SHIFT_R, _SCAN_SHIFT_L = 4, 5
 _SCAN_MAJ, _SCAN_NOTPAIR = 6, 7          # fused macro rows (SegMaj / SegNot)
 
 _SCAN_CODE = {ir.OP_ROWCLONE: _SCAN_COPY, ir.OP_DRA: _SCAN_COPY,
-              ir.OP_TRA: _SCAN_TRA, ir.OP_NOT2DCC: _SCAN_NOT2DCC,
-              ir.OP_DCC2: _SCAN_DCC2}
+              ir.OP_COPY: _SCAN_COPY, ir.OP_TRA: _SCAN_TRA,
+              ir.OP_NOT2DCC: _SCAN_NOT2DCC, ir.OP_DCC2: _SCAN_DCC2}
 
 
 @dataclasses.dataclass(frozen=True)

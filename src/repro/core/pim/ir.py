@@ -21,8 +21,12 @@ line-per-command format (see DESIGN.md §6) so external workloads can be
 replayed through ``benchmarks/trace_replay.py``. Multi-bank (device-level)
 streams serialize as ``pim-trace v2`` — a ``banks=N`` header plus
 ``BANK <b>`` line prefixes — via ``to_trace_banks``/``from_trace_banks``
-(DESIGN.md §7). Imports validate operands (row ranges, SHIFT delta) with
-line-numbered errors instead of letting the executor mis-execute them.
+(DESIGN.md §7); multi-subarray devices as ``pim-trace v3`` — an extra
+``subarrays=S`` header field and ``BANK <b> SUB <s>`` prefixes — via
+``to_trace_device``/``from_trace_device`` (DESIGN.md §8). v2/v3 HOSTW
+payloads use an RLE zero-page encoding when shorter than plain hex.
+Imports validate operands (row ranges, SHIFT delta) with line-numbered
+errors instead of letting the executor mis-execute them.
 """
 from __future__ import annotations
 
@@ -45,18 +49,84 @@ OP_SHIFT = "shift"
 OP_WRITE = "write_row"
 OP_READ = "read_row"
 OP_FILL = "fill"          # zero-cost row init (reserve_control_rows)
+OP_COPY = "copy"          # LISA row movement; dst may live in another
+                          # subarray/bank (device addressing in delta/c)
+
+# COPY's "destination = the slot carrying this stream" sentinel (delta = c =
+# COPY_SELF). Programs recorded with it stay local on WHATEVER slot runs
+# them — replicating one stream across banks keeps every copy in-bank —
+# whereas explicit coordinates (including (0, 0)) always name that device
+# slot.
+COPY_SELF = -1
+
+
+def copy_is_local(op: "PimOp") -> bool:
+    """True iff a COPY executes inside the single subarray running it:
+    self-addressed, or explicitly (0, 0) — which IS the only subarray on
+    the eager/compiled paths. The device scheduler additionally treats a
+    destination equal to the carrying slot as local (``schedule.py``)."""
+    return (op.delta, op.c) in ((COPY_SELF, COPY_SELF), (0, 0))
 
 # Trace mnemonics (stable on-disk names), one line per command.
 _MNEMONIC = {
     OP_ISSUE: "ISSUE", OP_ROWCLONE: "AAP", OP_DRA: "DRA", OP_TRA: "TRA",
     OP_NOT2DCC: "NOT2DCC", OP_DCC2: "DCC2", OP_SHIFT: "SHIFT",
-    OP_WRITE: "HOSTW", OP_READ: "HOSTR", OP_FILL: "FILL",
+    OP_WRITE: "HOSTW", OP_READ: "HOSTR", OP_FILL: "FILL", OP_COPY: "COPY",
 }
 _FROM_MNEMONIC = {v: k for k, v in _MNEMONIC.items()}
 
 
+# -- HOSTW payload encoding (plain hex / RLE zero-page) -----------------------
+
+def rle_encode_payload(row: np.ndarray) -> str:
+    """Run-length encode a uint32 row as ``rle:`` + comma-joined tokens:
+    ``<hex8>`` for a single word, ``<hex8>x<count>`` for a run. Multi-KB
+    HOSTW payloads are mostly zero pages — runs collapse them to one token.
+    """
+    row = np.asarray(row, dtype=np.uint32)
+    toks = []
+    i = 0
+    while i < row.size:
+        j = i + 1
+        while j < row.size and row[j] == row[i]:
+            j += 1
+        word = f"{int(row[i]):08x}"
+        toks.append(word if j - i == 1 else f"{word}x{j - i}")
+        i = j
+    return "rle:" + ",".join(toks)
+
+
+def decode_payload(tok: str, words: int) -> np.ndarray:
+    """Decode a HOSTW payload field: plain little-endian hex or ``rle:``."""
+    if not tok.startswith("rle:"):
+        payload = np.frombuffer(bytes.fromhex(tok), dtype="<u4")
+    else:
+        out = []
+        for t in tok[4:].split(","):
+            word, _, count = t.partition("x")
+            w = int(word, 16)
+            if not 0 <= w < 2**32:
+                raise ValueError(f"RLE word {word!r} is not a 32-bit value")
+            out.extend([w] * (int(count) if count else 1))
+        payload = np.asarray(out, dtype=np.uint32)
+    if payload.shape != (words,):
+        raise ValueError(
+            f"HOSTW payload is {payload.size} words, "
+            f"trace declares {words}")
+    return payload.astype(np.uint32)
+
+
+def _payload_field(row: np.ndarray, rle: bool) -> str:
+    plain = np.asarray(row, dtype="<u4").tobytes().hex()
+    if not rle:
+        return plain
+    enc = rle_encode_payload(row)
+    return enc if len(enc) < len(plain) else plain
+
+
 def _parse_operands(op: str, toks: list[str], payloads: "list[np.ndarray]",
-                    words: int, num_rows: int) -> "PimOp":
+                    words: int, num_rows: int, banks: int = 1,
+                    subarrays: int = 1) -> "PimOp":
     """Decode one trace line's operands (mnemonic already resolved).
 
     Operands are validated here so a malformed trace fails at import, not as
@@ -89,14 +159,20 @@ def _parse_operands(op: str, toks: list[str], payloads: "list[np.ndarray]",
                 f"SHIFT delta must be +1 or -1 (1-bit migration-cell "
                 f"primitive), got {delta:+d}")
         return PimOp(op, a=row(toks[1]), b=row(toks[2]), delta=delta)
-    if op == OP_WRITE:
-        payload = np.frombuffer(bytes.fromhex(toks[2]), dtype="<u4")
-        if payload.shape != (words,):
+    if op == OP_COPY:
+        dst_bank, dst_sub = int(toks[3]), int(toks[4])
+        if (dst_bank, dst_sub) != (COPY_SELF, COPY_SELF) and not (
+                0 <= dst_bank < banks and 0 <= dst_sub < subarrays):
             raise ValueError(
-                f"HOSTW payload is {payload.size} words, "
-                f"trace declares {words}")
+                f"COPY destination ({dst_bank}, {dst_sub}) outside the "
+                f"device ({banks} banks x {subarrays} subarrays); use "
+                f"{COPY_SELF} {COPY_SELF} for a local (self-slot) copy")
+        return PimOp(op, a=row(toks[1]), b=row(toks[2]), delta=dst_bank,
+                     c=dst_sub)
+    if op == OP_WRITE:
+        payload = decode_payload(toks[2], words)
         out = PimOp(op, b=row(toks[1]), payload=len(payloads))
-        payloads.append(payload.astype(np.uint32))
+        payloads.append(payload)
         return out
     if op == OP_READ:
         return PimOp(op, a=row(toks[1]))
@@ -109,7 +185,14 @@ class PimOp:
     """One primitive command. ``a``/``b``/``c`` are absolute row indices
     (src, dst, third TRA row); ``delta`` is the shift direction; ``payload``
     indexes ``PimProgram.payloads`` for WRITE and holds the fill word for
-    FILL."""
+    FILL.
+
+    COPY (LISA row movement) reuses ``delta``/``c`` as the *destination's
+    device coordinates* ``(dst_bank, dst_sub)``; the source is always the
+    slot whose stream carries the op. ``(COPY_SELF, COPY_SELF)`` addresses
+    the carrying slot itself — a local copy on whatever slot runs the
+    stream; explicit coordinates (including ``(0, 0)``) always name that
+    device slot."""
 
     op: str
     a: int = 0
@@ -119,7 +202,8 @@ class PimOp:
     payload: int = -1
 
     def reads(self) -> tuple[int, ...]:
-        if self.op in (OP_ROWCLONE, OP_DRA, OP_NOT2DCC, OP_SHIFT, OP_READ):
+        if self.op in (OP_ROWCLONE, OP_DRA, OP_NOT2DCC, OP_SHIFT, OP_READ,
+                       OP_COPY):
             return (self.a,)
         if self.op == OP_TRA:
             return (self.a, self.b, self.c)
@@ -129,6 +213,9 @@ class PimOp:
         if self.op in (OP_ROWCLONE, OP_DRA, OP_DCC2, OP_SHIFT, OP_WRITE,
                        OP_FILL):
             return (self.b,)
+        if self.op == OP_COPY:
+            # Cross-slot copies write another subarray's row, not a local one.
+            return (self.b,) if copy_is_local(self) else ()
         if self.op == OP_TRA:
             return (self.a, self.b, self.c)
         return ()
@@ -157,8 +244,15 @@ class PimProgram:
             out[o.op] = out.get(o.op, 0) + 1
         return out
 
+    @property
+    def host_bytes(self) -> int:
+        """Off-chip bytes this stream moves: HOSTW payloads + HOSTR rows.
+        The number the in-DRAM COPY path drives to zero."""
+        n = sum(int(p.size) * 4 for p in self.payloads)
+        return n + self.n_reads * self.words * 4
+
     # -- trace import/export --------------------------------------------------
-    def _format_op(self, o: PimOp) -> str:
+    def _format_op(self, o: PimOp, rle: bool = False) -> str:
         m = _MNEMONIC[o.op]
         if o.op == OP_ISSUE:
             return m
@@ -172,9 +266,10 @@ class PimProgram:
             return f"{m} {o.b}"
         if o.op == OP_SHIFT:
             return f"{m} {o.a} {o.b} {o.delta:+d}"
+        if o.op == OP_COPY:
+            return f"{m} {o.a} {o.b} {o.delta} {o.c}"
         if o.op == OP_WRITE:
-            data = self.payloads[o.payload].astype("<u4").tobytes().hex()
-            return f"{m} {o.b} {data}"
+            return f"{m} {o.b} {_payload_field(self.payloads[o.payload], rle)}"
         if o.op == OP_READ:
             return f"{m} {o.a}"
         assert o.op == OP_FILL, o.op
@@ -210,7 +305,8 @@ def to_trace_banks(programs: "Iterable[PimProgram]") -> str:
     Every command line carries a ``BANK <b>`` prefix; the header records the
     bank count. All banks must share one subarray shape (the device model's
     invariant). Single-program exports stay ``to_trace`` (v1) — v2 is the
-    superset format for device-level streams.
+    superset format for device-level streams. HOSTW payloads use the RLE
+    zero-page encoding whenever it is shorter than plain hex.
     """
     programs = list(programs)
     assert programs, "need at least one per-bank program"
@@ -221,20 +317,43 @@ def to_trace_banks(programs: "Iterable[PimProgram]") -> str:
     lines = [f"# pim-trace v2 rows={rows} words={words} "
              f"banks={len(programs)}"]
     for b, p in enumerate(programs):
-        lines.extend(f"BANK {b} {p._format_op(o)}" for o in p.ops)
+        lines.extend(f"BANK {b} {p._format_op(o, rle=True)}" for o in p.ops)
     return "\n".join(lines) + "\n"
 
 
-def from_trace_banks(text: str) -> tuple[PimProgram, ...]:
-    """Parse a ``pim-trace`` text into per-bank programs.
+def to_trace_device(programs) -> str:
+    """Export per-``(bank, subarray)`` programs as a ``pim-trace v3`` text.
 
-    Accepts v1 (no ``BANK`` prefixes → one program) and v2 (``banks=N``
-    header, ``BANK <b>`` prefixed command lines; unprefixed lines fall to
-    bank 0). Malformed lines raise line-numbered ``ValueError``s.
+    ``programs`` is a nested ``[bank][subarray]`` sequence (``None`` = idle
+    slot); all banks must have the same subarray count and all programs one
+    shape. Lines carry ``BANK <b> SUB <s>`` prefixes and the header records
+    both axes. HOSTW payloads use the RLE zero-page encoding when shorter.
     """
-    num_rows, words, banks = NUM_ROWS, ROW_WORDS, 1
-    ops: dict[int, list[PimOp]] = {}
-    payloads: dict[int, list[np.ndarray]] = {}
+    programs = [list(bank) for bank in programs]
+    assert programs and programs[0], "need at least one bank with subarrays"
+    subarrays = len(programs[0])
+    assert all(len(bank) == subarrays for bank in programs), \
+        "all banks must have the same subarray count"
+    shapes = {(p.num_rows, p.words) for bank in programs for p in bank
+              if p is not None}
+    assert len(shapes) <= 1, "slots must share one subarray shape"
+    rows, words = shapes.pop() if shapes else (NUM_ROWS, ROW_WORDS)
+    lines = [f"# pim-trace v3 rows={rows} words={words} "
+             f"banks={len(programs)} subarrays={subarrays}"]
+    for b, bank in enumerate(programs):
+        for s, p in enumerate(bank):
+            if p is not None:
+                lines.extend(f"BANK {b} SUB {s} {p._format_op(o, rle=True)}"
+                             for o in p.ops)
+    return "\n".join(lines) + "\n"
+
+
+def _parse_trace(text: str):
+    """Shared v1/v2/v3 parser → (per-slot ops/payloads, rows, words, banks,
+    subarrays). Slot key = (bank, sub); unprefixed lines fall to (0, 0)."""
+    num_rows, words, banks, subarrays = NUM_ROWS, ROW_WORDS, 1, 1
+    ops: dict[tuple[int, int], list[PimOp]] = {}
+    payloads: dict[tuple[int, int], list[np.ndarray]] = {}
     for lineno, raw in enumerate(text.splitlines(), 1):
         line = raw.split("//")[0].strip()
         if line.startswith("#"):
@@ -250,13 +369,19 @@ def from_trace_banks(text: str) -> tuple[PimProgram, ...]:
                             raise ValueError(
                                 f"trace line {lineno}: banks={banks} "
                                 "must be >= 1")
+                    elif tok.startswith("subarrays="):
+                        subarrays = int(tok[10:])
+                        if subarrays < 1:
+                            raise ValueError(
+                                f"trace line {lineno}: subarrays="
+                                f"{subarrays} must be >= 1")
             continue
         if not line:
             continue
         toks = line.split()
         if toks[0] == "PIM":      # HBM-PIMulator-style prefix is accepted
             toks = toks[1:]
-        bank = 0
+        bank = sub = 0
         try:
             if toks and toks[0].upper() == "BANK":
                 bank = int(toks[1])
@@ -265,20 +390,56 @@ def from_trace_banks(text: str) -> tuple[PimProgram, ...]:
                     raise ValueError(
                         f"bank {bank} out of range [0, {banks}) — is the "
                         "header's banks= count right?")
+            if toks and toks[0].upper() == "SUB":
+                sub = int(toks[1])
+                toks = toks[2:]
+                if not 0 <= sub < subarrays:
+                    raise ValueError(
+                        f"subarray {sub} out of range [0, {subarrays}) — "
+                        "is the header's subarrays= count right?")
             name = toks[0].upper() if toks else ""
             if name not in _FROM_MNEMONIC:
                 raise ValueError(f"unknown trace mnemonic {name!r}")
             op = _FROM_MNEMONIC[name]
-            ops.setdefault(bank, []).append(_parse_operands(
-                op, toks, payloads.setdefault(bank, []), words, num_rows))
+            key = (bank, sub)
+            ops.setdefault(key, []).append(_parse_operands(
+                op, toks, payloads.setdefault(key, []), words, num_rows,
+                banks, subarrays))
         except (IndexError, ValueError) as e:
             msg = "missing operand(s)" if isinstance(e, IndexError) else e
             raise ValueError(
                 f"trace line {lineno} ({raw.strip()!r}): {msg}") from e
-    return tuple(
-        PimProgram(ops=tuple(ops.get(b, ())), num_rows=num_rows, words=words,
-                   payloads=tuple(payloads.get(b, ())))
-        for b in range(banks))
+
+    def slot(b, s):
+        return PimProgram(ops=tuple(ops.get((b, s), ())), num_rows=num_rows,
+                          words=words,
+                          payloads=tuple(payloads.get((b, s), ())))
+
+    return slot, banks, subarrays
+
+
+def from_trace_banks(text: str) -> tuple[PimProgram, ...]:
+    """Parse a ``pim-trace`` text into per-bank programs.
+
+    Accepts v1 (no ``BANK`` prefixes → one program) and v2 (``banks=N``
+    header, ``BANK <b>`` prefixed command lines; unprefixed lines fall to
+    bank 0). Multi-subarray (v3) traces are refused with a pointer to
+    ``from_trace_device``. Malformed lines raise line-numbered errors.
+    """
+    slot, banks, subarrays = _parse_trace(text)
+    if subarrays != 1:
+        raise ValueError(
+            f"trace declares {subarrays} subarrays per bank; use "
+            "from_trace_device for multi-subarray (pim-trace v3) traces")
+    return tuple(slot(b, 0) for b in range(banks))
+
+
+def from_trace_device(text: str) -> tuple[tuple[PimProgram, ...], ...]:
+    """Parse any ``pim-trace`` text into nested ``[bank][subarray]``
+    programs (v1 → one bank/one subarray; v2 → N banks/one subarray)."""
+    slot, banks, subarrays = _parse_trace(text)
+    return tuple(tuple(slot(b, s) for s in range(subarrays))
+                 for b in range(banks))
 
 
 class ProgramBuilder:
@@ -338,6 +499,27 @@ class ProgramBuilder:
 
     def dcc_to(self, dst) -> "ProgramBuilder":
         self._ops.append(PimOp(OP_DCC2, b=self._resolve(dst)))
+        return self
+
+    def copy_row(self, src, dst, dst_bank: int = COPY_SELF,
+                 dst_sub: int = COPY_SELF) -> "ProgramBuilder":
+        """LISA row movement: ``dst`` row of slot ``(dst_bank, dst_sub)``
+        <- ``src`` row of the slot executing this stream. The default
+        destination is the *carrying slot itself* (``COPY_SELF``), so a
+        stream replicated across banks keeps its copies local everywhere;
+        explicit coordinates name a device slot and are only executable by
+        the device scheduler (``schedule.py``), which drains cross-slot
+        copies after the step's in-bank compute."""
+        dst_bank, dst_sub = int(dst_bank), int(dst_sub)
+        if (dst_bank, dst_sub) != (COPY_SELF, COPY_SELF) and (
+                dst_bank < 0 or dst_sub < 0):
+            raise ValueError(
+                f"COPY destination ({dst_bank}, {dst_sub}) must be "
+                f"non-negative coordinates, or ({COPY_SELF}, {COPY_SELF}) "
+                "for the carrying slot")
+        self._ops.append(PimOp(OP_COPY, a=self._resolve(src),
+                               b=self._resolve(dst), delta=dst_bank,
+                               c=dst_sub))
         return self
 
     def shift(self, src, dst, delta: int = +1) -> "ProgramBuilder":

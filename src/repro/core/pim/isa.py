@@ -31,7 +31,7 @@ import numpy as np
 
 from .state import EVEN_MASK, ODD_MASK, SubarrayState
 from .timing import (DDR3Timing, DEFAULT_TIMING, charge_aap, charge_burst,
-                     charge_issue, charge_mra, charge_shift)
+                     charge_copy, charge_issue, charge_mra, charge_shift)
 
 # Reserved row aliases (relative to num_rows R).
 C0 = -1   # constant zeros
@@ -188,6 +188,20 @@ def shift(state: SubarrayState, src, dst, delta: int = +1,
                  meter=charge_shift(state.meter, cfg))
 
 
+def lisa_copy(state: SubarrayState, src, dst,
+              cfg: DDR3Timing = DEFAULT_TIMING) -> SubarrayState:
+    """LISA row movement within this subarray: dst <- src at COPY timing.
+
+    A distance-0 LISA copy costs exactly one AAP (``timing.copy_cost``); the
+    interesting cross-subarray/cross-bank cases carry hop and internal-bus
+    charges and are applied by the device scheduler, which owns both
+    endpoints' state (``schedule.py``).
+    """
+    src_i, dst_i = resolve(state, src), resolve(state, dst)
+    return _with(state, bits=state.bits.at[dst_i].set(state.bits[src_i]),
+                 meter=charge_copy(state.meter, 0, False, cfg))
+
+
 def write_row(state: SubarrayState, dst, row: jax.Array,
               cfg: DDR3Timing = DEFAULT_TIMING) -> SubarrayState:
     """Host write: burst data onto the chip then restore into the row."""
@@ -242,6 +256,54 @@ def ambit_not(state: SubarrayState, src, dst,
     """dst <- ~src via the dual-contact-cell row (2 AAPs)."""
     s = not_to_dcc(state, src, cfg)
     return dcc_to(s, dst, cfg)
+
+
+def run_program(state: SubarrayState, program,
+                cfg: DDR3Timing = DEFAULT_TIMING):
+    """Replay a recorded :class:`~.ir.PimProgram` command-at-a-time through
+    this eager ISA. Returns ``(state, reads)``.
+
+    This is the differential-testing reference path (tests/
+    test_pim_differential.py): one Python-level pytree transition per
+    command, no compilation — the compiled executor must match it bit for
+    bit. Cross-slot COPYs have no meaning on one subarray and raise.
+    """
+    from . import ir
+
+    reads = []
+    for op in program.ops:
+        if op.op == ir.OP_ISSUE:
+            state = issue(state, cfg)
+        elif op.op == ir.OP_ROWCLONE:
+            state = rowclone(state, op.a, op.b, cfg)
+        elif op.op == ir.OP_DRA:
+            state = dra(state, op.a, op.b, cfg)
+        elif op.op == ir.OP_TRA:
+            state = tra(state, op.a, op.b, op.c, cfg)
+        elif op.op == ir.OP_NOT2DCC:
+            state = not_to_dcc(state, op.a, cfg)
+        elif op.op == ir.OP_DCC2:
+            state = dcc_to(state, op.b, cfg)
+        elif op.op == ir.OP_SHIFT:
+            state = shift(state, op.a, op.b, op.delta, cfg)
+        elif op.op == ir.OP_COPY:
+            if not ir.copy_is_local(op):
+                raise ValueError(
+                    f"cross-subarray COPY to ({op.delta}, {op.c}) needs the "
+                    "device scheduler; the eager path runs one subarray")
+            state = lisa_copy(state, op.a, op.b, cfg)
+        elif op.op == ir.OP_WRITE:
+            state = write_row(state, op.b,
+                              jnp.asarray(program.payloads[op.payload]), cfg)
+        elif op.op == ir.OP_READ:
+            state, row = read_row(state, op.a, cfg)
+            reads.append(row)
+        elif op.op == ir.OP_FILL:
+            row = jnp.full((state.words,), jnp.uint32(op.payload))
+            state = _with(state, bits=state.bits.at[op.b].set(row))
+        else:
+            raise ValueError(op.op)
+    return state, tuple(reads)
 
 
 def ambit_xor(state: SubarrayState, a, b, dst,

@@ -1,25 +1,41 @@
-"""Workload scheduler for device-level (multi-bank) PIM execution.
+"""Workload scheduler for device-level (multi-bank, multi-subarray) PIM
+execution.
 
-Takes *heterogeneous* per-bank :class:`~.ir.PimProgram`s and executes them
-against a :class:`~.device.DeviceState` with as few compiled artifacts as
-possible: banks whose command streams are identical (same ops, shape and
-payload count — payload *data* may differ) form one group, and each group
-runs as ONE compiled runner vmapped over the group's bank states with the
-HOSTW payloads passed as a batched argument (``exec.make_runner``'s
+Takes *heterogeneous* per-slot :class:`~.ir.PimProgram`s (slot = one
+``(bank, subarray)`` pair) and executes them against a
+:class:`~.device.DeviceState` with as few compiled artifacts as possible:
+slots whose command streams are identical (same ops, shape and payload
+count — payload *data* may differ) form one group, and each group runs as
+ONE compiled runner vmapped over the group's slot states with the HOSTW
+payloads passed as a batched argument (``exec.make_runner``'s
 ``payload_arg`` mode). This is SIMDRAM's framework split — program →
 allocation → execution — with Shared-PIM-style concurrent bank scheduling.
 
-Device accounting (see ``device.py``): per-bank meters accumulate each
-bank's own busy time; the schedule-level wall clock is
+In-DRAM row movement (``COPY``, LISA-style): a slot's stream may carry
+``COPY`` ops whose destination is *another* slot — an adjacent subarray
+(row-buffer-movement hops) or another bank (the chip's shared internal
+bus). The scheduler strips those ops out of the compiled streams and
+drains them **after the step's in-bank compute**, DMA-engine style: a
+cross-slot COPY reads its source row's *post-compute* value, copies apply
+in (slot, stream-position) order (later copies observe earlier ones), and
+the moved rows are visible to the *next* ``schedule`` step. Each copy
+charges ``timing.copy_cost`` onto the **source** slot's meter — no HOSTR/
+HOSTW, no off-chip burst energy. Same-slot COPYs stay in-stream (they are
+ordinary distance-0 LISA copies the executor runs directly).
 
-    wall = Σ_b bus_b  +  max_b (Δtime_b − bus_b)        energy = Σ_b Δenergy_b
+Device accounting (see ``device.py``): per-slot meters accumulate each
+slot's own busy time; the schedule-level wall clock is
 
-where ``bus_b`` is bank b's serialized per-burst ``ISSUE`` occupancy.
+    wall = Σ_k bus_k  +  max_k (Δtime_k − bus_k)        energy = Σ_k Δenergy_k
+
+where ``bus_k`` is slot k's serialized per-burst ``ISSUE`` occupancy.
 
 ``shard_rows`` / ``shard_lanes`` partition one large host buffer into
-per-bank programs (row-wise or lane-wise), the building blocks the
-benchmarks and ``bitplane.PimVM``'s ``n_banks`` mode use to scatter a
-multi-KB workload over the paper's 32 banks.
+per-slot programs (row-wise or lane-wise, optionally across the subarray
+axis), and ``gather_rows`` / ``xor_reduce_program`` are the in-DRAM
+movement/reduction building blocks the benchmarks use to exchange rows
+between slots without host round-trips (RS syndrome sums across banks,
+cross-lane reductions).
 """
 from __future__ import annotations
 
@@ -33,10 +49,10 @@ import numpy as np
 from . import exec as pim_exec
 from . import ir
 from .compile import CompiledProgram, compile_program
-from .device import DeviceState, bus_time_ns, device_wall_ns
+from .device import DeviceConfig, DeviceState, bus_time_ns, device_wall_ns
 from .ir import PimProgram, ProgramBuilder
 from .state import NUM_ROWS
-from .timing import DDR3Timing
+from .timing import DDR3Timing, copy_cost
 
 
 @dataclasses.dataclass
@@ -44,16 +60,18 @@ class ScheduleResult:
     """Outcome of one device-level schedule step."""
 
     state: DeviceState
-    wall_ns: jax.Array          # bus serialization + max in-bank exec
+    wall_ns: jax.Array          # bus serialization + max in-slot exec
     bus_ns: jax.Array           # serialized command-bus occupancy
-    energy_nj: jax.Array        # summed across banks (this step only)
-    reads: tuple                # per bank: host-read rows in slot order
+    energy_nj: jax.Array        # summed across slots (this step only)
+    reads: tuple                # per slot: host-read rows in slot order
+    copy_ns: float = 0.0        # in-DRAM COPY time drained this step
+    host_bytes: int = 0         # off-chip bytes this step's streams moved
 
 
 def stream_key(p: PimProgram):
-    """Banks with equal keys share one compiled vmapped runner: identical
+    """Slots with equal keys share one compiled vmapped runner: identical
     command stream and shape; HOSTW payload *data* is excluded (it is passed
-    per-bank at run time)."""
+    per-slot at run time)."""
     return (p.ops, p.num_rows, p.words, len(p.payloads))
 
 
@@ -74,7 +92,7 @@ def _compiled_for(program: PimProgram, timing: DDR3Timing) -> CompiledProgram:
 
 
 def _payload_stack(programs: Sequence[PimProgram], words: int) -> jnp.ndarray:
-    """(n_banks_in_group, n_payloads, words) uint32 HOSTW payload batch."""
+    """(n_slots_in_group, n_payloads, words) uint32 HOSTW payload batch."""
     n_pay = len(programs[0].payloads)
     if n_pay == 0:
         return jnp.zeros((len(programs), 0, words), jnp.uint32)
@@ -82,58 +100,195 @@ def _payload_stack(programs: Sequence[PimProgram], words: int) -> jnp.ndarray:
         [np.stack(p.payloads) for p in programs]).astype(np.uint32))
 
 
+def _normalize_programs(cfg: DeviceConfig, programs) -> list:
+    """Accept per-bank (len ``n_banks``, entries optionally nested per
+    subarray) or flat per-slot (len ``n_slots``) program sequences and
+    return a flat per-slot list (``None`` = idle)."""
+    programs = list(programs)
+    flat: list = [None] * cfg.n_slots
+    S = cfg.subarrays
+
+    def put(slot, p):
+        flat[slot] = p
+
+    if len(programs) == cfg.n_slots and not any(
+            isinstance(p, (list, tuple)) for p in programs):
+        for k, p in enumerate(programs):
+            put(k, p)
+        return flat
+    if len(programs) != cfg.n_banks:
+        raise ValueError(
+            f"got {len(programs)} programs for {cfg.n_banks} banks "
+            f"({cfg.n_slots} slots)")
+    for b, entry in enumerate(programs):
+        if isinstance(entry, (list, tuple)):
+            if len(entry) != S:
+                raise ValueError(
+                    f"bank {b}: {len(entry)} subarray programs for "
+                    f"{S} subarrays")
+            for s, p in enumerate(entry):
+                put(b * S + s, p)
+        else:
+            put(b * S, entry)       # bare program → the bank's subarray 0
+    return flat
+
+
+def _split_copies(cfg: DeviceConfig, slot: int, program: PimProgram):
+    """Partition one slot's stream into (compiled-stream program, deferred
+    cross-slot copies). Same-slot COPYs are normalized to the executor's
+    local ``COPY_SELF`` encoding and stay in-stream."""
+    b, s = cfg.slot_coords(slot)
+    self_dst = (ir.COPY_SELF, ir.COPY_SELF)
+    kept, deferred = [], []
+    changed = False
+    for op in program.ops:
+        # On the device, local means self-addressed or "destination IS the
+        # carrying slot" — explicit (0, 0) on any other carrier is a real
+        # transfer to bank 0, so ir.copy_is_local only applies at (0, 0).
+        is_local = (op.op == ir.OP_COPY
+                    and ((op.delta, op.c) == self_dst
+                         or (op.delta, op.c) == (b, s)))
+        if op.op != ir.OP_COPY or is_local:
+            if is_local and (op.delta, op.c) != self_dst:
+                op = dataclasses.replace(op, delta=ir.COPY_SELF,
+                                         c=ir.COPY_SELF)
+                changed = True
+            kept.append(op)
+            continue
+        dst_slot = cfg.slot_index(op.delta, op.c)   # validates coordinates
+        if not (0 <= op.a < cfg.num_rows and 0 <= op.b < cfg.num_rows):
+            raise ValueError(
+                f"slot {(b, s)}: COPY rows {(op.a, op.b)} out of range "
+                f"[0, {cfg.num_rows})")
+        deferred.append((slot, dst_slot, op))
+        changed = True
+    if not changed:
+        return program, deferred
+    return PimProgram(ops=tuple(kept), num_rows=program.num_rows,
+                      words=program.words,
+                      payloads=program.payloads), deferred
+
+
+def _apply_copies(cfg: DeviceConfig, banks, deferred):
+    """Drain deferred cross-slot copies on the post-compute state: move the
+    rows in (slot, stream-position) order and charge ``copy_cost`` onto each
+    source slot's meter. Returns (banks', total_copy_ns)."""
+    S, t = cfg.subarrays, cfg.timing
+    n = cfg.n_slots
+    dt = np.zeros(n, np.float32)
+    e_act = np.zeros(n, np.float32)
+    e_pre = np.zeros(n, np.float32)
+    n_act = np.zeros(n, np.int32)
+    n_pre = np.zeros(n, np.int32)
+    n_aap = np.zeros(n, np.int32)
+    srcs = [(k, op.a) for k, _, op in deferred]
+    dsts = [(d, op.b) for _, d, op in deferred]
+    bits = banks.bits
+    if len(set(dsts)) == len(dsts) and not set(dsts) & set(srcs):
+        # Independent copies (the common gather pattern: distinct
+        # destinations, none feeding a later copy) — ONE batched scatter
+        # instead of a dispatch per row.
+        si, sr = (jnp.asarray([x[j] for x in srcs]) for j in (0, 1))
+        di, dr = (jnp.asarray([x[j] for x in dsts]) for j in (0, 1))
+        bits = bits.at[di, dr].set(bits[si, sr])
+    else:
+        for src_slot, dst_slot, op in deferred:
+            bits = bits.at[dst_slot, op.b].set(bits[src_slot, op.a])
+    for src_slot, dst_slot, op in deferred:
+        sb, ss = divmod(src_slot, S)
+        db, ds = divmod(dst_slot, S)
+        inter_bank = sb != db
+        hops = abs(ds - ss) if not inter_bank else 0
+        c_dt, c_ea, c_ep, c_na, c_np, c_naap = copy_cost(hops, inter_bank, t)
+        dt[src_slot] += np.float32(c_dt)
+        e_act[src_slot] += np.float32(c_ea)
+        e_pre[src_slot] += np.float32(c_ep)
+        n_act[src_slot] += c_na
+        n_pre[src_slot] += c_np
+        n_aap[src_slot] += c_naap
+    m = banks.meter
+    meter = dataclasses.replace(
+        m,
+        time_ns=m.time_ns + jnp.asarray(dt),
+        e_act=m.e_act + jnp.asarray(e_act),
+        e_pre=m.e_pre + jnp.asarray(e_pre),
+        e_background=m.e_background
+        + jnp.asarray(dt) * jnp.float32(t.p_background),
+        n_act=m.n_act + jnp.asarray(n_act),
+        n_pre=m.n_pre + jnp.asarray(n_pre),
+        n_aap=m.n_aap + jnp.asarray(n_aap))
+    return dataclasses.replace(banks, bits=bits, meter=meter), float(dt.sum())
+
+
 def schedule(device: DeviceState,
-             programs: Sequence[PimProgram | None], *,
+             programs, *,
              use_kernels: bool | None = None,
              interpret: bool | None = None,
              refresh: bool = False) -> ScheduleResult:
-    """Run one program per bank (``None`` = idle bank) and fold the device
-    timing model over the per-bank meters.
+    """Run one program per slot (``None`` = idle slot) and fold the device
+    timing model over the per-slot meters.
 
-    ``refresh`` folds periodic-refresh stalls/energy into each bank's meter
-    (``timing.apply_refresh``). It recounts from the bank's *cumulative*
-    busy time, so only use it on single-shot runs against fresh devices —
-    repeated refreshed schedules on one device would double-count events.
+    ``programs`` may be per-bank (len ``n_banks``; entries are a program for
+    the bank's subarray 0 or a nested per-subarray sequence) or flat
+    per-slot (len ``n_slots``). Cross-slot ``COPY`` ops are stripped from
+    the compiled streams and drained after the in-bank compute (see module
+    docstring).
+
+    ``refresh`` folds periodic-refresh stalls/energy into each slot's meter
+    (``timing.apply_refresh``); the fold is incremental against the meter's
+    ``n_refresh`` history, so repeated refreshed schedules on one device
+    charge every event exactly once.
     """
     cfg = device.config
-    if len(programs) != cfg.n_banks:
-        raise ValueError(
-            f"got {len(programs)} programs for {cfg.n_banks} banks")
-    for b, p in enumerate(programs):
+    flat = _normalize_programs(cfg, programs)
+    for k, p in enumerate(flat):
         if p is not None and (p.num_rows, p.words) != (cfg.num_rows,
                                                        cfg.words):
             raise ValueError(
-                f"bank {b}: program shape {(p.num_rows, p.words)} != device "
+                f"slot {cfg.slot_coords(k)}: program shape "
+                f"{(p.num_rows, p.words)} != device "
                 f"shape {(cfg.num_rows, cfg.words)}")
 
+    deferred: list = []
+    stripped: list = [None] * cfg.n_slots
+    for k, p in enumerate(flat):
+        if p is None:
+            continue
+        stripped[k], slot_copies = _split_copies(cfg, k, p)
+        deferred.extend(slot_copies)
+
     groups: dict = {}
-    for b, p in enumerate(programs):
+    for k, p in enumerate(stripped):
         if p is not None and len(p.ops):
-            groups.setdefault(stream_key(p), []).append(b)
+            groups.setdefault(stream_key(p), []).append(k)
 
     banks = device.banks
     t0 = jnp.asarray(banks.meter.time_ns)
     e0 = jnp.asarray(banks.meter.total_energy_nj)
     new_banks = banks
-    reads: list[tuple] = [() for _ in range(cfg.n_banks)]
-    bus = np.zeros(cfg.n_banks, np.float32)
+    reads: list[tuple] = [() for _ in range(cfg.n_slots)]
+    bus = np.zeros(cfg.n_slots, np.float32)
 
-    for key, bank_ids in groups.items():
-        group_progs = [programs[b] for b in bank_ids]
+    for key, slot_ids in groups.items():
+        group_progs = [stripped[k] for k in slot_ids]
         compiled = _compiled_for(group_progs[0], cfg.timing)
         runner = pim_exec.make_runner(
             compiled, cfg.timing, use_kernels=use_kernels,
             interpret=interpret, refresh=refresh, payload_arg=True)
-        idx = jnp.asarray(bank_ids)
+        idx = jnp.asarray(slot_ids)
         sub = jax.tree_util.tree_map(lambda x: x[idx], banks)
         out, group_reads = jax.vmap(runner.traced)(
             sub, _payload_stack(group_progs, cfg.words))
         new_banks = jax.tree_util.tree_map(
             lambda full, upd: full.at[idx].set(upd), new_banks, out)
         group_bus = bus_time_ns(group_progs[0], cfg.timing)
-        for j, b in enumerate(bank_ids):
-            reads[b] = tuple(r[j] for r in group_reads)
-            bus[b] = group_bus
+        for j, k in enumerate(slot_ids):
+            reads[k] = tuple(r[j] for r in group_reads)
+            bus[k] = group_bus
+
+    copy_ns = 0.0
+    if deferred:
+        new_banks, copy_ns = _apply_copies(cfg, new_banks, deferred)
 
     t1 = jnp.asarray(new_banks.meter.time_ns)
     e1 = jnp.asarray(new_banks.meter.total_energy_nj)
@@ -144,11 +299,60 @@ def schedule(device: DeviceState,
         wall_ns=device_wall_ns(bus_j, exec_ns),
         bus_ns=jnp.sum(bus_j),
         energy_nj=jnp.sum(e1 - e0),
-        reads=tuple(reads))
+        reads=tuple(reads),
+        copy_ns=copy_ns,
+        host_bytes=sum(p.host_bytes for p in flat if p is not None))
 
 
 # ---------------------------------------------------------------------------
-# Host-buffer partitioners: one large buffer → per-bank programs
+# In-DRAM movement / reduction primitives
+# ---------------------------------------------------------------------------
+
+def gather_rows(cfg: DeviceConfig, moves, programs=None) -> list:
+    """Per-slot COPY streams for in-DRAM row movement (zero host bytes).
+
+    ``moves``: iterable of ``((src_bank, src_sub, src_row),
+    (dst_bank, dst_sub, dst_row))``. Each move records one ``COPY`` in the
+    *source* slot's stream; the scheduler drains them after the step's
+    compute, so gathered rows hold post-compute values and are readable by
+    the next step. ``programs`` (optional, any layout ``schedule`` accepts)
+    is appended to — pass the step's compute programs to fuse compute +
+    gather into one ``schedule`` call. Returns a flat per-slot list.
+    """
+    base = (_normalize_programs(cfg, programs) if programs is not None
+            else [None] * cfg.n_slots)
+    builders: dict[int, ProgramBuilder] = {}
+    for (sb, ss, sr), (db, ds, dr) in moves:
+        slot = cfg.slot_index(sb, ss)
+        cfg.slot_index(db, ds)          # validate destination coordinates
+        builders.setdefault(
+            slot, ProgramBuilder(cfg.num_rows, cfg.words)).copy_row(
+                sr, dr, db, ds)
+    out = list(base)
+    for slot, b in builders.items():
+        copies = b.build()
+        out[slot] = (copies if out[slot] is None
+                     else ir.concat([out[slot], copies]))
+    return out
+
+
+def xor_reduce_program(num_rows: int, words: int, rows: Sequence[int],
+                       dst: int) -> PimProgram:
+    """One slot's in-place XOR fold: ``dst <- rows[0] ^ rows[1] ^ ...`` via
+    Ambit XOR (rows must avoid the T0..T3 scratch). The reduction half of a
+    gather/reduce step — all row traffic stays inside the subarray."""
+    b = ProgramBuilder(num_rows, words)
+    rows = list(rows)
+    assert rows, "need at least one row to reduce"
+    if rows[0] != dst:
+        b.rowclone(rows[0], dst)
+    for r in rows[1:]:
+        b.ambit_xor(dst, r, dst)
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# Host-buffer partitioners: one large buffer → per-slot programs
 # ---------------------------------------------------------------------------
 
 BuildFn = Callable[[ProgramBuilder, list[int]], None]
@@ -169,39 +373,57 @@ def _chunk_program(chunk: np.ndarray, num_rows: int, words: int,
     return b.build()
 
 
-def shard_rows(data: np.ndarray, n_banks: int, num_rows: int = NUM_ROWS, *,
-               build: BuildFn | None = None,
-               read_back: bool = False) -> list[PimProgram]:
-    """Split a ``(R, words)`` row buffer row-wise across ``n_banks``.
+def _regroup(programs: list, subarrays: int):
+    """Flat chunk list → nested [bank][sub] when placing across the
+    subarray axis; flat per-bank list otherwise (back-compat)."""
+    if subarrays == 1:
+        return programs
+    return [programs[b * subarrays:(b + 1) * subarrays]
+            for b in range(len(programs) // subarrays)]
 
-    Bank ``b`` receives a contiguous chunk of rows, HOSTW-written to its rows
+
+def shard_rows(data: np.ndarray, n_banks: int, num_rows: int = NUM_ROWS, *,
+               subarrays: int = 1, build: BuildFn | None = None,
+               read_back: bool = False) -> list:
+    """Split a ``(R, words)`` row buffer row-wise across ``n_banks`` banks
+    (× ``subarrays`` slots per bank).
+
+    Each slot receives a contiguous chunk of rows, HOSTW-written to its rows
     ``0..k-1`` after one ISSUE burst; ``build(builder, local_rows)`` then
-    appends the per-bank compute. Chunks are ``np.array_split``-balanced, so
-    R need not divide evenly (trailing banks may be one row short or idle).
+    appends the per-slot compute. Chunks are ``np.array_split``-balanced, so
+    R need not divide evenly (trailing slots may be one row short or idle).
+    Returns a flat per-bank list, or nested ``[bank][sub]`` when
+    ``subarrays > 1`` — both layouts feed ``schedule`` directly.
     """
     data = np.asarray(data, dtype=np.uint32)
     assert data.ndim == 2, data.shape
-    chunks = np.array_split(data, n_banks, axis=0)
-    return [_chunk_program(c, num_rows, data.shape[1], build, read_back)
-            for c in chunks]
+    chunks = np.array_split(data, n_banks * subarrays, axis=0)
+    return _regroup(
+        [_chunk_program(c, num_rows, data.shape[1], build, read_back)
+         for c in chunks], subarrays)
 
 
 def shard_lanes(data: np.ndarray, n_banks: int, num_rows: int = NUM_ROWS, *,
-                build: BuildFn | None = None,
-                read_back: bool = False) -> list[PimProgram]:
-    """Split a ``(R, words)`` row buffer lane-wise across ``n_banks``.
+                subarrays: int = 1, build: BuildFn | None = None,
+                read_back: bool = False) -> list:
+    """Split a ``(R, words)`` row buffer lane-wise across ``n_banks`` banks
+    (× ``subarrays`` slots per bank).
 
-    Bank ``b`` receives the word-slice ``[:, b*w:(b+1)*w]`` of every row
-    (``w = words // n_banks``) — all banks then run the SAME command stream
+    Slot ``k`` receives the word-slice ``[:, k*w:(k+1)*w]`` of every row
+    (``w = words // n_slots``) — all slots then run the SAME command stream
     over different columns, the natural SIMD split for element-parallel
     workloads (element width must divide 32 so lanes never straddle the
-    word-slice boundary).
+    word-slice boundary). Layout as in ``shard_rows``.
     """
     data = np.asarray(data, dtype=np.uint32)
     assert data.ndim == 2, data.shape
     words = data.shape[1]
-    if words % n_banks:
-        raise ValueError(f"words={words} not divisible by n_banks={n_banks}")
-    w = words // n_banks
-    chunks = [data[:, b * w:(b + 1) * w] for b in range(n_banks)]
-    return [_chunk_program(c, num_rows, w, build, read_back) for c in chunks]
+    n_slots = n_banks * subarrays
+    if words % n_slots:
+        raise ValueError(f"words={words} not divisible by n_banks*subarrays="
+                         f"{n_slots}")
+    w = words // n_slots
+    chunks = [data[:, k * w:(k + 1) * w] for k in range(n_slots)]
+    return _regroup(
+        [_chunk_program(c, num_rows, w, build, read_back) for c in chunks],
+        subarrays)

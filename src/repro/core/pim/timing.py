@@ -44,6 +44,16 @@ class DDR3Timing:
     # Multi-row activation: k simultaneously-raised rows share one bitline
     # swing but restore k cells. Extra restore energy per extra row:
     e_act_extra_row: float = 1.2    # nJ / additional row in DRA/TRA
+    # LISA-style in-DRAM row movement. An inter-subarray COPY activates the
+    # source row, links neighboring row buffers (RBM) one hop at a time, and
+    # restores into the destination; each hop adds link latency/energy. An
+    # inter-bank COPY instead crosses the chip's shared internal I/O bus
+    # (RowClone's inter-bank mode): a fixed extra latency/energy, still far
+    # below the two off-chip bursts a host round-trip would cost.
+    t_rbm: float = 8.0              # ns / inter-subarray link hop (LISA RBM)
+    e_rbm: float = 0.2              # nJ / link hop
+    t_copy_bank: float = 99.0       # ns inter-bank internal-bus transfer (2 tRC)
+    e_copy_bank: float = 11.0       # nJ / inter-bank row transfer
 
     @property
     def t_aap(self) -> float:
@@ -108,6 +118,29 @@ def charge_shift(meter: CostMeter,
     )
 
 
+def copy_cost(hops: int = 0, inter_bank: bool = False,
+              cfg: DDR3Timing = DEFAULT_TIMING):
+    """(dt_ns, e_act, e_pre, n_act, n_pre, n_aap) of one LISA COPY.
+
+    ``hops`` inter-subarray link hops inside one bank; ``inter_bank`` routes
+    over the shared internal bus instead. ``hops=0`` without ``inter_bank``
+    degenerates to exactly one AAP — a distance-0 LISA copy *is* RowClone.
+    """
+    dt = cfg.t_aap + hops * cfg.t_rbm + (cfg.t_copy_bank if inter_bank
+                                         else 0.0)
+    e_act = 2 * cfg.e_act + hops * cfg.e_rbm + (cfg.e_copy_bank if inter_bank
+                                                else 0.0)
+    return dt, e_act, cfg.e_pre, 2, 1, 1
+
+
+def charge_copy(meter: CostMeter, hops: int = 0, inter_bank: bool = False,
+                cfg: DDR3Timing = DEFAULT_TIMING) -> CostMeter:
+    """LISA row movement: source activation + RBM hops (+ internal bus)."""
+    dt, e_act, e_pre, n_act, n_pre, n_aap = copy_cost(hops, inter_bank, cfg)
+    return _bump(meter, dt=dt, e_act=e_act, e_pre=e_pre, n_act=n_act,
+                 n_pre=n_pre, n_aap=n_aap, cfg=cfg)
+
+
 def charge_issue(meter: CostMeter,
                  cfg: DDR3Timing = DEFAULT_TIMING) -> CostMeter:
     """One-time command-bus issue overhead for a burst of PIM commands."""
@@ -116,25 +149,35 @@ def charge_issue(meter: CostMeter,
 
 def apply_refresh(meter: CostMeter,
                   cfg: DDR3Timing = DEFAULT_TIMING) -> CostMeter:
-    """Fold in periodic refresh for the elapsed busy time.
+    """Fold in periodic refresh for the elapsed busy time — incrementally.
 
-    NVMain interleaves REF every tREFI; we post-process: n = floor(t/tREFI)
-    refresh events, each adding tRFC stall and e_ref energy (self-consistently
-    re-counted once against the stall-extended time).
+    NVMain interleaves REF every tREFI; we post-process: the meter owes
+    n = floor(busy/tREFI) refresh events in total, each adding tRFC stall
+    and e_ref energy (self-consistently re-counted once against the
+    stall-extended time). ``busy`` is the meter's wall time with previously
+    charged refresh stalls stripped (``n_refresh`` events × tRFC), and only
+    the events *not yet charged* are added — so repeated application on an
+    accumulating meter (e.g. back-to-back refreshed ``schedule()`` calls on
+    one device) counts every event exactly once instead of re-charging the
+    whole history per call. On a never-refreshed meter this reduces to the
+    single-shot formula bit-for-bit.
     """
-    n = jnp.floor(meter.time_ns / cfg.tREFI).astype(jnp.int32)
+    prior = meter.n_refresh.astype(jnp.float32)
+    busy = meter.time_ns - prior * cfg.tRFC
+    n = jnp.floor(busy / cfg.tREFI).astype(jnp.int32)
     # One fixed-point re-count: stalls extend wall time past further tREFIs.
-    n = jnp.floor((meter.time_ns + n * cfg.tRFC) / cfg.tREFI).astype(jnp.int32)
+    n = jnp.floor((busy + n * cfg.tRFC) / cfg.tREFI).astype(jnp.int32)
+    new = jnp.maximum(n - meter.n_refresh, 0)
     return CostMeter(
-        time_ns=meter.time_ns + n * cfg.tRFC,
+        time_ns=meter.time_ns + new * cfg.tRFC,
         e_act=meter.e_act, e_pre=meter.e_pre,
-        e_refresh=meter.e_refresh + n.astype(jnp.float32) * cfg.e_ref,
+        e_refresh=meter.e_refresh + new.astype(jnp.float32) * cfg.e_ref,
         e_burst=meter.e_burst,
         e_background=meter.e_background
-        + n.astype(jnp.float32) * cfg.tRFC * jnp.float32(cfg.p_background),
+        + new.astype(jnp.float32) * cfg.tRFC * jnp.float32(cfg.p_background),
         n_act=meter.n_act, n_pre=meter.n_pre, n_aap=meter.n_aap,
         n_shift=meter.n_shift, n_tra=meter.n_tra,
-        n_refresh=meter.n_refresh + n,
+        n_refresh=meter.n_refresh + new,
     )
 
 

@@ -8,8 +8,14 @@ try:  # hypothesis is optional: clean environments still run the example tests
 except ImportError:
     pass
 else:
+    _suppress = [HealthCheck.too_slow, HealthCheck.data_too_large]
+    # derandomize: CI failures must reproduce from the fixed profile seed.
     settings.register_profile(
-        "ci", deadline=None, max_examples=25,
-        suppress_health_check=[HealthCheck.too_slow,
-                               HealthCheck.data_too_large])
-    settings.load_profile("ci")
+        "ci", deadline=None, max_examples=25, derandomize=True,
+        suppress_health_check=_suppress)
+    # Heavier sweep for the differential harness (CI runs it explicitly:
+    # HYPOTHESIS_PROFILE=differential pytest tests/test_pim_differential.py).
+    settings.register_profile(
+        "differential", deadline=None, max_examples=200, derandomize=True,
+        suppress_health_check=_suppress)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))

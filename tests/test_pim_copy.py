@@ -1,0 +1,414 @@
+"""In-DRAM row movement (LISA COPY) + multi-subarray banks.
+
+Covers: the subarray axis on DeviceConfig/DeviceState, local COPY semantics
+across all three execution paths, scheduler-drained cross-subarray and
+cross-bank copies (timing/energy charged to the source slot, zero host
+bytes), the gather/reduce primitives, subarray-aware sharding, and the
+incremental-refresh regression (apply_refresh used to re-charge the whole
+history on every refreshed ``schedule`` call).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import pim
+from repro.core.pim import exec as pim_exec
+from repro.core.pim import ir
+
+WORDS = 4
+ROWS = 16
+
+
+def _rand_row(rng):
+    return rng.integers(0, 2**32, (WORDS,), dtype=np.uint32)
+
+
+def _device(n_banks, subarrays=1, rows=ROWS, words=WORDS):
+    return pim.make_device(pim.DeviceConfig(
+        channels=1, ranks=1, banks_per_rank=n_banks, subarrays=subarrays,
+        num_rows=rows, words=words))
+
+
+# ---------------------------------------------------------------------------
+# Device geometry
+# ---------------------------------------------------------------------------
+
+def test_subarray_axis_shapes_and_accessors():
+    cfg = pim.DeviceConfig(channels=1, ranks=1, banks_per_rank=3,
+                           subarrays=2, num_rows=ROWS, words=WORDS)
+    assert cfg.n_banks == 3 and cfg.n_slots == 6
+    assert cfg.slot_index(2, 1) == 5
+    assert cfg.slot_coords(5) == (2, 1)
+    with pytest.raises(ValueError, match="subarray"):
+        cfg.slot_index(0, 2)
+    with pytest.raises(ValueError, match="bank"):
+        cfg.slot_index(3, 0)
+    dev = pim.make_device(cfg)
+    assert dev.banks.bits.shape == (6, ROWS, WORDS)
+    assert dev.slot(2, 1).bits.shape == (ROWS, WORDS)
+    assert dev.bank(1).bits.shape == (2, ROWS, WORDS)   # stacked subarrays
+    # single-subarray banks keep the PR-2 unbatched contract
+    assert _device(2).bank(1).bits.shape == (ROWS, WORDS)
+
+
+def test_paper_device_takes_subarrays():
+    cfg = pim.paper_device(8, subarrays=4)
+    assert cfg.n_banks == 8 and cfg.n_slots == 32
+
+
+# ---------------------------------------------------------------------------
+# Local COPY: one op, three execution paths
+# ---------------------------------------------------------------------------
+
+def test_local_copy_agrees_and_costs_one_aap():
+    rng = np.random.default_rng(0)
+    b = pim.ProgramBuilder(ROWS, WORDS)
+    b.write_row(0, _rand_row(rng))
+    b.copy_row(0, 2)
+    b.read_row(2)
+    prog = b.build()
+    st = pim.reserve_control_rows(pim.make_subarray(ROWS, WORDS))
+    s_e, reads_e = pim.run_program(st, prog)
+    res = pim_exec.execute(
+        prog, pim.reserve_control_rows(pim.make_subarray(ROWS, WORDS)))
+    assert np.array_equal(np.asarray(s_e.bits), np.asarray(res.state.bits))
+    assert np.array_equal(np.asarray(reads_e[0]), np.asarray(res.reads[0]))
+    for f in ("time_ns", "e_act", "e_pre"):
+        assert float(getattr(s_e.meter, f)) == float(
+            getattr(res.state.meter, f)), f
+    # distance-0 LISA copy == exactly one AAP
+    ref = pim.lisa_copy(pim.make_subarray(ROWS, WORDS), 0, 2)
+    assert int(ref.meter.n_aap) == 1 and int(ref.meter.n_act) == 2
+    assert float(ref.meter.time_ns) == pytest.approx(
+        pim.DEFAULT_TIMING.t_aap)
+
+
+def test_cross_subarray_copy_refused_off_device():
+    b = pim.ProgramBuilder(ROWS, WORDS)
+    b.copy_row(0, 1, dst_bank=0, dst_sub=1)
+    prog = b.build()
+    with pytest.raises(ValueError, match="scheduler"):
+        pim_exec.execute(prog)
+    with pytest.raises(ValueError, match="scheduler"):
+        pim.run_program(pim.make_subarray(ROWS, WORDS), prog)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-drained copies
+# ---------------------------------------------------------------------------
+
+def test_cross_subarray_copy_moves_row_and_charges_source():
+    rng = np.random.default_rng(1)
+    data = _rand_row(rng)
+    b = pim.ProgramBuilder(ROWS, WORDS)
+    b.write_row(0, data)
+    b.copy_row(0, 5, dst_bank=0, dst_sub=2)
+    dev = _device(1, subarrays=3)
+    res = pim.schedule(dev, [[b.build(), None, None]])
+    assert np.array_equal(np.asarray(res.state.slot(0, 2).bits[5]), data)
+    t = pim.DEFAULT_TIMING
+    dt, e_act, e_pre, n_act, n_pre, n_aap = pim.copy_cost(2, False, t)
+    assert dt == pytest.approx(t.t_aap + 2 * t.t_rbm)
+    m_src = res.state.slot(0, 0).meter
+    m_dst = res.state.slot(0, 2).meter
+    # the source slot pays (write burst + copy); the destination stays idle
+    assert float(m_dst.time_ns) == 0.0
+    assert res.copy_ns == pytest.approx(dt)
+    assert int(m_src.n_aap) == 1 and int(m_src.n_act) == 1 + n_act
+    assert float(res.energy_nj) > 0
+
+
+def test_cross_bank_copy_and_next_step_visibility():
+    rng = np.random.default_rng(2)
+    data = _rand_row(rng)
+    b = pim.ProgramBuilder(ROWS, WORDS)
+    b.write_row(0, data)
+    b.copy_row(0, 7, dst_bank=2, dst_sub=0)
+    dev = _device(3)
+    r1 = pim.schedule(dev, [b.build(), None, None])
+    assert np.array_equal(np.asarray(r1.state.bank(2).bits[7]), data)
+    t = pim.DEFAULT_TIMING
+    assert r1.copy_ns == pytest.approx(t.t_aap + t.t_copy_bank)
+    # the moved row is readable by the NEXT schedule step
+    rb = pim.ProgramBuilder(ROWS, WORDS)
+    rb.read_row(7)
+    r2 = pim.schedule(r1.state, [None, None, rb.build()])
+    assert np.array_equal(np.asarray(r2.reads[2][0]), data)
+
+
+def test_copy_drains_after_compute_and_in_stream_order():
+    """A COPY reads its source row's post-compute value, and later copies
+    observe earlier ones (chained gather within one step)."""
+    rng = np.random.default_rng(3)
+    data = _rand_row(rng)
+    b0 = pim.ProgramBuilder(ROWS, WORDS)
+    b0.write_row(0, data)
+    b0.copy_row(0, 4, dst_bank=1, dst_sub=0)  # reads row 0 AFTER the shift
+    b0.shift(0, 0, +1)                        # compute happens first
+    b1 = pim.ProgramBuilder(ROWS, WORDS)
+    b1.copy_row(4, 5, dst_bank=2, dst_sub=0)  # later slot: sees row 4
+    dev = _device(3)
+    res = pim.schedule(dev, [b0.build(), b1.build(), None])
+    shifted = np.asarray(pim.shift_row_words(jnp.asarray(data), 1))
+    assert np.array_equal(np.asarray(res.state.bank(1).bits[4]), shifted)
+    assert np.array_equal(np.asarray(res.state.bank(2).bits[5]), shifted)
+
+
+def test_copy_to_own_slot_is_local_on_any_carrier():
+    """COPY whose destination IS the carrying slot executes in-stream, even
+    for carriers other than bank 0 — and a (0,0)-addressed COPY on another
+    carrier is a genuine transfer to bank 0 (the regression that bit the
+    first implementation)."""
+    rng = np.random.default_rng(4)
+    data = _rand_row(rng)
+    b = pim.ProgramBuilder(ROWS, WORDS)
+    b.write_row(0, data)
+    b.copy_row(0, 3, dst_bank=1, dst_sub=0)   # local: carrier is (1, 0)
+    b.copy_row(3, 6, dst_bank=0, dst_sub=0)   # cross-bank to bank 0
+    dev = _device(2)
+    res = pim.schedule(dev, [None, b.build()])
+    assert np.array_equal(np.asarray(res.state.bank(1).bits[3]), data)
+    assert np.array_equal(np.asarray(res.state.bank(0).bits[6]), data)
+
+
+def test_default_copy_stays_local_when_replicated_across_banks():
+    """Regression: a stream recorded with the default (self) COPY
+    destination must behave identically on EVERY slot — it used to be
+    silently retargeted to bank 0 when scheduled on banks 1+."""
+    rng = np.random.default_rng(11)
+    rows = rng.integers(0, 2**32, (4, WORDS), dtype=np.uint32)
+    progs = []
+    for b in range(4):
+        pb = pim.ProgramBuilder(ROWS, WORDS)
+        pb.write_row(1, rows[b])
+        pb.copy_row(1, 2)                 # default destination = self
+        progs.append(pb.build())
+    res = pim.schedule(_device(4), progs)
+    assert res.copy_ns == 0.0             # all local, nothing drained
+    for b in range(4):
+        ref, _ = pim.run_program(
+            pim.reserve_control_rows(pim.make_subarray(ROWS, WORDS)),
+            progs[b])
+        assert np.array_equal(np.asarray(res.state.bank(b).bits),
+                              np.asarray(ref.bits)), b
+
+
+def test_schedule_accepts_flat_slot_programs():
+    rng = np.random.default_rng(5)
+    d0, d1 = _rand_row(rng), _rand_row(rng)
+    mk = lambda d: pim.ProgramBuilder(ROWS, WORDS).write_row(0, d).build()
+    dev = _device(2, subarrays=2)
+    res = pim.schedule(dev, [mk(d0), None, None, mk(d1)])
+    assert np.array_equal(np.asarray(res.state.slot(0, 0).bits[0]), d0)
+    assert np.array_equal(np.asarray(res.state.slot(1, 1).bits[0]), d1)
+    with pytest.raises(ValueError, match="programs for"):
+        pim.schedule(dev, [None, None, None])
+    with pytest.raises(ValueError, match="subarray programs"):
+        pim.schedule(dev, [[None], [None]])
+
+
+# ---------------------------------------------------------------------------
+# gather_rows / xor_reduce_program
+# ---------------------------------------------------------------------------
+
+def test_gather_reduce_zero_host_bytes_bit_exact():
+    """Binary-tree XOR reduction of one row across 4 banks: every byte moves
+    via COPY (host_bytes == 0) and the result equals the numpy fold."""
+    rng = np.random.default_rng(6)
+    n = 4
+    rows = rng.integers(0, 2**32, (n, WORDS), dtype=np.uint32)
+    dev = _device(n)
+    load = [pim.ProgramBuilder(ROWS, WORDS).write_row(1, rows[b]).build()
+            for b in range(n)]
+    state = pim.schedule(dev, load).state
+    cfg = state.config
+    moves = [((b, 0, 1), (0, 0, 2 + b - 1)) for b in range(1, n)]
+    r1 = pim.schedule(state, pim.gather_rows(cfg, moves))
+    assert r1.host_bytes == 0
+    fold = pim.xor_reduce_program(ROWS, WORDS, [1, 2, 3, 4], 5)
+    r2 = pim.schedule(r1.state, [fold, None, None, None])
+    assert r2.host_bytes == 0
+    got = np.asarray(r2.state.bank(0).bits[5])
+    assert np.array_equal(got, np.bitwise_xor.reduce(rows))
+
+
+def test_gather_rows_appends_to_compute_programs():
+    rng = np.random.default_rng(7)
+    data = _rand_row(rng)
+    cfg = pim.DeviceConfig(channels=1, ranks=1, banks_per_rank=2,
+                           num_rows=ROWS, words=WORDS)
+    compute = [pim.ProgramBuilder(ROWS, WORDS).write_row(0, data).build(),
+               None]
+    progs = pim.gather_rows(cfg, [((0, 0, 0), (1, 0, 9))], compute)
+    res = pim.schedule(pim.make_device(cfg), progs)
+    assert np.array_equal(np.asarray(res.state.bank(1).bits[9]), data)
+
+
+def test_shard_rows_across_subarrays():
+    rng = np.random.default_rng(8)
+    data = rng.integers(0, 2**32, (8, WORDS), dtype=np.uint32)
+    progs = pim.shard_rows(data, 2, num_rows=ROWS, subarrays=2,
+                           read_back=True)
+    assert len(progs) == 2 and len(progs[0]) == 2     # nested [bank][sub]
+    res = pim.schedule(_device(2, subarrays=2), progs)
+    got = np.concatenate(
+        [np.stack([np.asarray(r) for r in res.reads[k]])
+         for k in range(4) if res.reads[k]])
+    assert np.array_equal(got, data)
+
+
+def test_shard_lanes_across_subarrays():
+    rng = np.random.default_rng(9)
+    data = rng.integers(0, 2**32, (2, WORDS * 4), dtype=np.uint32)
+
+    def build(b, rows):
+        b.ambit_xor(rows[0], rows[1], 2)
+        b.read_row(2)
+
+    progs = pim.shard_lanes(data, 2, num_rows=ROWS, subarrays=2, build=build)
+    res = pim.schedule(_device(2, subarrays=2), progs)
+    got = np.concatenate([np.asarray(res.reads[k][0]) for k in range(4)])
+    assert np.array_equal(got, data[0] ^ data[1])
+
+
+# ---------------------------------------------------------------------------
+# Trace v3
+# ---------------------------------------------------------------------------
+
+def test_trace_v3_round_trip_and_replay():
+    rng = np.random.default_rng(10)
+    data = _rand_row(rng)
+    b00 = pim.ProgramBuilder(ROWS, WORDS)
+    b00.issue()
+    b00.write_row(0, data)
+    b00.copy_row(0, 2, dst_bank=1, dst_sub=1)
+    b11 = pim.ProgramBuilder(ROWS, WORDS)
+    b11.shift(2, 3, +1)
+    nested = [[b00.build(), None], [None, b11.build()]]
+    text = pim.to_trace_device(nested)
+    assert text.splitlines()[0].startswith("# pim-trace v3")
+    assert "subarrays=2" in text.splitlines()[0]
+    rt = pim.from_trace_device(text)
+    assert rt[0][0].ops == nested[0][0].ops
+    assert rt[1][1].ops == nested[1][1].ops
+    assert rt[0][1].ops == () and rt[1][0].ops == ()
+    with pytest.raises(ValueError, match="from_trace_device"):
+        pim.from_trace_banks(text)
+    cfg = pim.DeviceConfig(channels=1, ranks=1, banks_per_rank=2,
+                           subarrays=2, num_rows=ROWS, words=WORDS)
+    res = pim.schedule(pim.make_device(cfg), [list(b) for b in rt])
+    assert np.array_equal(np.asarray(res.state.slot(1, 1).bits[2]), data)
+
+
+def test_trace_copy_line_validation():
+    with pytest.raises(ValueError, match="outside the device"):
+        pim.PimProgram.from_trace(
+            "# pim-trace v1 rows=16 words=4\nCOPY 0 1 -1 0\n")
+    with pytest.raises(ValueError, match="out of range"):
+        pim.PimProgram.from_trace(
+            "# pim-trace v1 rows=16 words=4\nCOPY 99 1 0 0\n")
+    with pytest.raises(ValueError, match="missing operand"):
+        pim.PimProgram.from_trace(
+            "# pim-trace v1 rows=16 words=4\nCOPY 0 1\n")
+    # destination bank/sub must fit the header's device shape at import
+    with pytest.raises(ValueError, match="outside the device"):
+        pim.from_trace_banks("# pim-trace v2 rows=16 words=4 banks=2\n"
+                             "BANK 0 COPY 1 2 7 0\n")
+    with pytest.raises(ValueError, match="outside the device"):
+        pim.from_trace_device(
+            "# pim-trace v3 rows=16 words=4 banks=2 subarrays=2\n"
+            "BANK 0 SUB 0 COPY 1 2 0 2\n")
+    # the self sentinel is valid in any shape
+    (p,) = pim.from_trace_banks(
+        "# pim-trace v1 rows=16 words=4\nCOPY 0 1 -1 -1\n")
+    assert (p.ops[0].delta, p.ops[0].c) == (-1, -1)
+
+
+def test_copy_builder_validation():
+    b = pim.ProgramBuilder(ROWS, WORDS)
+    with pytest.raises(ValueError, match="non-negative"):
+        b.copy_row(0, 1, dst_bank=-2)
+    with pytest.raises(ValueError, match="non-negative"):
+        b.copy_row(0, 1, dst_bank=-1, dst_sub=0)   # half-sentinel is invalid
+    # scheduler refuses destinations outside the device
+    b2 = pim.ProgramBuilder(ROWS, WORDS)
+    b2.copy_row(0, 1, dst_bank=7, dst_sub=0)
+    with pytest.raises(ValueError, match="bank"):
+        pim.schedule(_device(2), [b2.build(), None])
+
+
+# ---------------------------------------------------------------------------
+# RLE payload encoding
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("row", [
+    np.zeros(64, np.uint32),                                   # all-zero page
+    np.r_[np.zeros(60, np.uint32), np.arange(4, dtype=np.uint32)],  # sparse
+    np.arange(64, dtype=np.uint32),                            # dense
+    np.array([0xFFFFFFFF] * 3 + [0], np.uint32),               # short run
+])
+def test_rle_payload_round_trip(row):
+    enc = pim.rle_encode_payload(row)
+    assert enc.startswith("rle:")
+    assert np.array_equal(pim.decode_payload(enc, row.size), row)
+    plain = row.astype("<u4").tobytes().hex()
+    assert np.array_equal(pim.decode_payload(plain, row.size), row)
+
+
+def test_trace_v2_rle_payload_round_trips_and_shrinks():
+    b = pim.ProgramBuilder(64, 64)
+    b.write_row(0, np.zeros(64, np.uint32))
+    prog = b.build()
+    text = pim.to_trace_banks([prog])
+    assert "rle:00000000x64" in text
+    (rt,) = pim.from_trace_banks(text)
+    assert np.array_equal(rt.payloads[0], prog.payloads[0])
+    # plain v1 export unchanged (golden fixtures stay stable)
+    assert "rle:" not in prog.to_trace()
+
+
+def test_decode_payload_rejects_wrong_length():
+    with pytest.raises(ValueError, match="words"):
+        pim.decode_payload("rle:00000000x3", 4)
+
+
+# ---------------------------------------------------------------------------
+# Refresh accounting across schedule calls (regression)
+# ---------------------------------------------------------------------------
+
+def test_refresh_counts_once_across_sequential_schedules():
+    """Two refreshed schedule() calls on one device must account exactly the
+    events a single refreshed run of the concatenated stream accounts —
+    apply_refresh used to re-charge the whole history on every call."""
+    prog = pim.shift_workload_program(41, ROWS, WORDS)     # ~8.2 us > tREFI
+    dev = _device(1)
+    r1 = pim.schedule(dev, [prog], refresh=True)
+    r2 = pim.schedule(r1.state, [prog], refresh=True)
+    m = r2.state.bank(0).meter
+    assert int(r1.state.bank(0).meter.n_refresh) == 1
+    both = ir.concat([prog, prog])
+    ref = pim_exec.execute(
+        both, pim.reserve_control_rows(pim.make_subarray(ROWS, WORDS)),
+        refresh=True)
+    assert int(m.n_refresh) == int(ref.state.meter.n_refresh) == 2
+    assert float(m.time_ns) == pytest.approx(
+        float(ref.state.meter.time_ns), rel=1e-6)
+    assert float(m.e_refresh) == pytest.approx(
+        float(ref.state.meter.e_refresh), rel=1e-6)
+
+
+def test_apply_refresh_idempotent_when_no_new_busy_time():
+    m = pim.CostMeter.zeros()
+    m = pim.charge_copy(m)          # tiny busy time, no refresh due
+    r1 = pim.apply_refresh(m)
+    r2 = pim.apply_refresh(r1)
+    assert int(r2.n_refresh) == int(r1.n_refresh) == 0
+    assert float(r2.time_ns) == float(r1.time_ns)
+    # and with events due: re-applying without new busy time adds none
+    prog = pim.shift_workload_program(41, ROWS, WORDS)
+    meter = pim.cost_pass(prog)
+    a1 = pim.apply_refresh(meter)
+    a2 = pim.apply_refresh(a1)
+    assert int(a1.n_refresh) == 1
+    assert int(a2.n_refresh) == int(a1.n_refresh)
+    assert float(a2.time_ns) == float(a1.time_ns)

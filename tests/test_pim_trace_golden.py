@@ -1,0 +1,118 @@
+"""Golden pim-trace fixtures: the on-disk formats v1/v2/v3 are frozen.
+
+Each fixture under ``tests/fixtures/`` must (a) parse, (b) re-export to the
+*identical byte string* — so any change to mnemonics, operand order, header
+fields, or the RLE payload encoding fails loudly here instead of silently
+orphaning every previously shared trace — and (c) replay to the same state
+and reads as the equivalent freshly-recorded execution.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import pim
+from repro.core.pim import exec as pim_exec
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+
+def _load(name: str) -> str:
+    with open(os.path.join(FIXTURES, name)) as f:
+        return f.read()
+
+
+# ---------------------------------------------------------------------------
+# (a)+(b): parse → re-export must be byte-identical
+# ---------------------------------------------------------------------------
+
+def test_golden_v1_reexports_identically():
+    text = _load("golden_v1.trace")
+    prog = pim.PimProgram.from_trace(text)
+    assert prog.to_trace() == text
+
+
+def test_golden_v2_reexports_identically():
+    text = _load("golden_v2.trace")
+    banks = pim.from_trace_banks(text)
+    assert len(banks) == 2
+    assert pim.to_trace_banks(banks) == text
+
+
+def test_golden_v3_reexports_identically():
+    text = _load("golden_v3.trace")
+    nested = pim.from_trace_device(text)
+    assert len(nested) == 2 and len(nested[0]) == 2
+    assert pim.to_trace_device(nested) == text
+
+
+def test_golden_v2_payload_encodings_are_as_committed():
+    """The fixture pins one all-zero (RLE), one dense (plain hex) and one
+    sparse (RLE run) payload — changing the encoder's choice rule breaks
+    byte-stability and must surface here."""
+    text = _load("golden_v2.trace")
+    assert "rle:00000000x4" in text                  # all-zero page
+    assert "efbeadde67452301efcdab8942424242" in text  # dense stays plain
+    assert "rle:deadbeefx3,00000001" in text         # sparse run
+
+
+# ---------------------------------------------------------------------------
+# (c): replay equivalence
+# ---------------------------------------------------------------------------
+
+def test_golden_v1_replays_like_eager():
+    prog = pim.PimProgram.from_trace(_load("golden_v1.trace"))
+    st = pim.reserve_control_rows(pim.make_subarray(16, 4))
+    s_e, reads_e = pim.run_program(st, prog)
+    res = pim_exec.execute(
+        prog, pim.reserve_control_rows(pim.make_subarray(16, 4)))
+    assert np.array_equal(np.asarray(s_e.bits), np.asarray(res.state.bits))
+    assert len(reads_e) == len(res.reads) == 2
+    for x, y in zip(reads_e, res.reads):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert float(res.state.meter.time_ns) == pytest.approx(
+        float(s_e.meter.time_ns))
+
+
+def test_golden_v2_replays_like_per_bank_execution():
+    banks = pim.from_trace_banks(_load("golden_v2.trace"))
+    dev = pim.make_device(pim.DeviceConfig(
+        channels=1, ranks=1, banks_per_rank=2, num_rows=16, words=4))
+    res = pim.schedule(dev, list(banks))
+    for b, p in enumerate(banks):
+        ref = pim_exec.execute(
+            p, pim.reserve_control_rows(pim.make_subarray(16, 4)))
+        assert np.array_equal(np.asarray(ref.state.bits),
+                              np.asarray(res.state.bank(b).bits)), b
+        for x, y in zip(ref.reads, res.reads[b]):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), b
+
+
+def test_golden_v3_replays_copies_through_scheduler():
+    nested = pim.from_trace_device(_load("golden_v3.trace"))
+    cfg = pim.DeviceConfig(channels=1, ranks=1, banks_per_rank=2,
+                           subarrays=2, num_rows=16, words=4)
+    res = pim.schedule(pim.make_device(cfg), [list(b) for b in nested])
+    st = res.state
+    # bank 0 sub 0 wrote [7,0,0,7] to row 0 and COPYed it to bank 0 sub 1
+    # row 1; bank 1 sub 0 COPYed its row 0 to bank 0 sub 0 row 3.
+    assert np.array_equal(np.asarray(st.slot(0, 0).bits[0]),
+                          np.array([7, 0, 0, 7], np.uint32))
+    assert np.array_equal(np.asarray(st.slot(0, 1).bits[1]),
+                          np.array([7, 0, 0, 7], np.uint32))
+    assert np.array_equal(np.asarray(st.slot(0, 0).bits[3]),
+                          np.array([0, 0xFFFFFFFF, 0, 0], np.uint32))
+    # sub 1 of bank 0: FILL + AAP ran in-slot
+    assert np.array_equal(np.asarray(st.slot(0, 1).bits[3]),
+                          np.full(4, 0x0F0F0F0F, np.uint32))
+    # one inter-subarray hop + one inter-bank transfer drained
+    t = pim.DEFAULT_TIMING
+    assert res.copy_ns == pytest.approx(
+        2 * t.t_aap + t.t_rbm + t.t_copy_bank)
+
+
+def test_golden_v1_rejects_when_corrupted():
+    """A malformed line in a committed fixture must fail at import."""
+    text = _load("golden_v1.trace").replace("SHIFT 2 3 +1", "SHIFT 2 3 +2")
+    with pytest.raises(ValueError, match="delta"):
+        pim.PimProgram.from_trace(text)
