@@ -74,6 +74,49 @@ def run(report=print):
                      f"wall_ns={float(res.wall_ns):.1f};"
                      f"bus_ns={float(res.bus_ns):.1f}"))
 
+    # Channel overlap: the same host-load + shift workload over 16 banks
+    # arranged as 1 channel x 2 ranks vs 2 channels x 1 rank. Off-chip
+    # HOSTW/HOSTR bursts serialize per channel, so the 2-channel layout
+    # overlaps two burst streams; async host scheduling additionally hides
+    # the second step's transfers under the first step's compute.
+    n16 = 16
+    data16 = rng.integers(0, 2**32, (2 * n16, dcfg.words), dtype=np.uint32)
+
+    def build(b, rows):
+        for r in rows:
+            b.shift_k(r, r, 8)
+
+    def chan_steps(cfg, async_host):
+        dev = pim.make_device(cfg)
+        walls = []
+        for step in range(2):
+            progs = pim.shard_rows(data16[step * n16:(step + 1) * n16],
+                                   cfg.n_banks, num_rows=cfg.num_rows,
+                                   build=build)
+            res = pim.schedule(dev, progs, async_host=async_host)
+            dev = res.state
+            walls.append(float(res.wall_ns))
+        return sum(walls), res
+
+    cfg_1ch = pim.DeviceConfig(channels=1, ranks=2, banks_per_rank=8,
+                               num_rows=dcfg.num_rows, words=dcfg.words)
+    cfg_2ch = pim.DeviceConfig(channels=2, ranks=1, banks_per_rank=8,
+                               num_rows=dcfg.num_rows, words=dcfg.words)
+    (w1, r_1ch), us = timed(lambda: chan_steps(cfg_1ch, False),
+                            warmup=0, iters=1)
+    w2, r_2ch = chan_steps(cfg_2ch, False)
+    w2a, r_2a = chan_steps(cfg_2ch, True)
+    assert w2 < w1, "2-channel wall must beat 1-channel serialization"
+    assert w2a <= w2, "async host must not be slower than sync"
+    report(f"channel overlap, {n16} banks x 2 steps: 1ch={w1:.1f} ns "
+           f"(switch {r_1ch.rank_switch_ns:.1f}), 2ch={w2:.1f} ns, "
+           f"2ch+async={w2a:.1f} ns "
+           f"(hidden {r_2a.host_overlap_ns:.1f} ns/step)")
+    report(f"  per-channel busy 2ch: "
+           f"{tuple(round(x, 1) for x in r_2ch.channel_bus_ns)}")
+    rows_out.append(("bank_parallel_channels", us,
+                     f"w_1ch={w1:.1f};w_2ch={w2:.1f};w_2ch_async={w2a:.1f}"))
+
     # Cross-lane reduction via in-DRAM COPY (LISA): XOR-fold the 8 banks'
     # shifted rows into bank 0 with zero host traffic — gather row 1 from
     # banks 1..7 into bank-0 scratch rows, then one Ambit XOR chain. The
@@ -103,7 +146,8 @@ def run(report=print):
     assert r2.host_bytes == dcfg.words * 4, "only the result read goes off-chip"
     report(f"cross-lane reduce {banks} banks: wall="
            f"{float(r1.wall_ns) + float(r2.wall_ns):.1f} ns "
-           f"(copy {r1.copy_ns:.1f} ns), host bytes gather/fold = "
+           f"(copy {r1.copy_ns:.1f} ns, queued {r1.copy_queue_ns:.1f} ns), "
+           f"host bytes gather/fold = "
            f"{r1.host_bytes}/{r2.host_bytes} (result read only)")
     rows_out.append(("bank_parallel_reduce", us,
                      f"wall_ns={float(r1.wall_ns) + float(r2.wall_ns):.1f};"

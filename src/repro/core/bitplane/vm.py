@@ -19,9 +19,13 @@ command-at-a-time execution via the ``isa`` shim.
 (loads, masks) are split lane-wise so bank ``b`` operates on lanes
 ``[b*L/N, (b+1)*L/N)``. Flushes run through the device scheduler
 (``pim.schedule``) as ONE compiled runner vmapped over the banks;
-``time_ns`` is then the device wall clock (bus serialization + max over
-banks) and ``energy_nj`` the sum — the lanes-sharded results are bit-exact
-against the same VM program on a single ``n_banks * words``-wide subarray.
+``time_ns`` is then the device wall clock (per-channel bus serialization +
+max over banks) and ``energy_nj`` the sum — the lanes-sharded results are
+bit-exact against the same VM program on a single ``n_banks * words``-wide
+subarray. ``async_host=True`` additionally lets each flush's HOSTW/HOSTR
+bursts overlap the previous flush's compute (the scheduler's async host
+engine, DESIGN.md §9); batch reads with ``read_many`` so a pipeline step
+stays one flush.
 """
 from __future__ import annotations
 
@@ -43,14 +47,17 @@ class PimVM:
 
     def __init__(self, width: int, num_rows: int = 128, words: int = 16,
                  cfg: DDR3Timing = DEFAULT_TIMING, eager: bool = False,
-                 n_banks: int = 1):
+                 n_banks: int = 1, async_host: bool = False):
         assert (words * 32) % width == 0
         assert words % n_banks == 0, (words, n_banks)
+        assert not (async_host and n_banks == 1), \
+            "async_host rides the device scheduler; use n_banks > 1"
         self.width = width
         self.words = words
         self.cfg = cfg
         self.eager = eager
         self.n_banks = n_banks
+        self.async_host = async_host
         self.lanes = (words * 32) // width
         self._num_rows = num_rows
         self._reads: tuple = ()
@@ -73,6 +80,7 @@ class PimVM:
                 channels=1, ranks=1, banks_per_rank=n_banks,
                 num_rows=num_rows, words=self.bank_words, timing=cfg))
             self._wall_ns = 0.0
+            self._host_overlap_ns = 0.0
 
     # -- recording / flushing --------------------------------------------------
     def _op(self, name: str, *args) -> None:
@@ -110,10 +118,11 @@ class PimVM:
                        payloads=tuple(rows[b] for rows in
                                       self._bank_payloads))
             for b in range(self.n_banks)]
-        res = schedule(self._device, programs)
+        res = schedule(self._device, programs, async_host=self.async_host)
         self._device = res.state
         self._reads = res.reads            # per bank, slot order
         self._wall_ns += float(res.wall_ns)
+        self._host_overlap_ns += float(res.host_overlap_ns)
         self._builder = ProgramBuilder(self._num_rows, self.bank_words)
         self._bank_payloads = []
 
@@ -156,16 +165,28 @@ class PimVM:
     def read(self, reg: int) -> np.ndarray:
         if self.eager:
             self.state, row = isa.read_row(self.state, reg, self.cfg)
-        else:
-            slot = self._builder.read_row(reg)
-            self._flush()
+            return layout.unpack_elements(row, self.width, self.lanes)
+        return self.read_many([reg])[0]
+
+    def read_many(self, regs) -> list[np.ndarray]:
+        """Read several registers with ONE flush. A per-``read`` flush
+        splits the stream into many schedule steps whose trailing read-only
+        steps carry no compute — which starves the async host engine's
+        double buffer; batching keeps each pipeline step one flush."""
+        if self.eager:
+            return [self.read(r) for r in regs]
+        slots = [self._builder.read_row(r) for r in regs]
+        self._flush()
+        out = []
+        for slot in slots:
             if self.n_banks == 1:
                 row = self._reads[slot]
             else:
                 row = np.concatenate(
                     [np.asarray(self._reads[b][slot])
                      for b in range(self.n_banks)])
-        return layout.unpack_elements(row, self.width, self.lanes)
+            out.append(layout.unpack_elements(row, self.width, self.lanes))
+        return out
 
     def mask(self, element_pattern: int) -> int:
         """Row with ``element_pattern`` tiled into every element (cached)."""
@@ -275,6 +296,13 @@ class PimVM:
         if self.n_banks == 1:
             return float(self.state.meter.total_energy_nj)
         return float(jnp.sum(self._device.banks.meter.total_energy_nj))
+
+    @property
+    def host_overlap_ns(self) -> float:
+        """Host-transfer time hidden under compute by the async engine
+        (sharded VMs with ``async_host=True``), accumulated across flushes."""
+        self._flush()
+        return 0.0 if self.n_banks == 1 else self._host_overlap_ns
 
     @property
     def setup_energy_nj(self) -> float:

@@ -2,8 +2,9 @@
 from .state import (CostMeter, SubarrayState, make_bank, make_subarray,
                     EVEN_MASK, ODD_MASK, NUM_ROWS, ROW_BITS, ROW_WORDS,
                     WORD_BITS)
-from .timing import (DDR3Timing, DEFAULT_TIMING, apply_refresh, charge_copy,
-                     copy_cost, cpu_movement_energy_nj)
+from .timing import (DDR3Timing, DEFAULT_TIMING, apply_refresh,
+                     burst_time_ns, charge_copy, copy_cost,
+                     cpu_movement_energy_nj, refresh_events)
 from .isa import (C0, C1, T0, T1, T2, T3, ambit_and, ambit_maj, ambit_not,
                   ambit_or, ambit_xor, dcc_to, dra, issue, lisa_copy,
                   maj3_words, not_to_dcc, read_row, reserve_control_rows,
@@ -17,18 +18,20 @@ from .ir import (COPY_SELF, PimOp, PimProgram, ProgramBuilder,
 from .compile import (CompiledProgram, compile_program, cost_pass,
                       cost_summary, dead_copy_elimination, fuse)
 from .exec import ExecResult, execute, make_runner
-from .device import (DeviceConfig, DeviceState, bus_time_ns, device_wall_ns,
-                     make_device, paper_device)
-from .schedule import (ScheduleResult, gather_rows, schedule, shard_lanes,
-                       shard_rows, stream_key, xor_reduce_program)
+from .device import (DeviceConfig, DeviceState, bus_time_ns,
+                     channel_bus_model, device_wall_ns, host_bus_ns,
+                     issue_bus_ns, make_device, paper_device)
+from .schedule import (CopyDrainStats, ScheduleResult, gather_rows, schedule,
+                       shard_lanes, shard_rows, stream_key,
+                       xor_reduce_program)
 from .variation import (PAPER_TABLE4, TECH22, Tech22nm, shift_failure_rate)
 from .area import AreaModel, PAPER_TABLE5, mim_capacitor_plate_side_um
 
 __all__ = [
     "CostMeter", "SubarrayState", "make_bank", "make_subarray",
     "EVEN_MASK", "ODD_MASK", "NUM_ROWS", "ROW_BITS", "ROW_WORDS", "WORD_BITS",
-    "DDR3Timing", "DEFAULT_TIMING", "apply_refresh", "charge_copy",
-    "copy_cost", "cpu_movement_energy_nj",
+    "DDR3Timing", "DEFAULT_TIMING", "apply_refresh", "burst_time_ns",
+    "charge_copy", "copy_cost", "cpu_movement_energy_nj", "refresh_events",
     "C0", "C1", "T0", "T1", "T2", "T3", "ambit_and", "ambit_maj", "ambit_not",
     "ambit_or", "ambit_xor", "dcc_to", "dra", "issue", "lisa_copy",
     "maj3_words", "not_to_dcc", "read_row", "reserve_control_rows",
@@ -42,10 +45,11 @@ __all__ = [
     "CompiledProgram", "compile_program", "cost_pass", "cost_summary",
     "dead_copy_elimination", "fuse",
     "ExecResult", "execute", "make_runner",
-    "DeviceConfig", "DeviceState", "bus_time_ns", "device_wall_ns",
+    "DeviceConfig", "DeviceState", "bus_time_ns", "channel_bus_model",
+    "device_wall_ns", "host_bus_ns", "issue_bus_ns",
     "make_device", "paper_device",
-    "ScheduleResult", "gather_rows", "schedule", "shard_lanes", "shard_rows",
-    "stream_key", "xor_reduce_program",
+    "CopyDrainStats", "ScheduleResult", "gather_rows", "schedule",
+    "shard_lanes", "shard_rows", "stream_key", "xor_reduce_program",
     "PAPER_TABLE4", "TECH22", "Tech22nm", "shift_failure_rate",
     "AreaModel", "PAPER_TABLE5", "mim_capacitor_plate_side_um",
 ]

@@ -37,7 +37,8 @@ import numpy as np
 
 from . import ir, isa
 from .state import CostMeter
-from .timing import DDR3Timing, DEFAULT_TIMING
+from .timing import (DDR3Timing, DEFAULT_TIMING, burst_time_ns,
+                     refresh_events_scalar)
 
 _FLOAT_FIELDS = ("time_ns", "e_act", "e_pre", "e_refresh", "e_burst",
                  "e_background")
@@ -80,7 +81,7 @@ def _event_rows(op: ir.PimOp, words: int, cfg: DDR3Timing):
                [1, 1, 0, 0, int(k == 3), 0])
     elif op.op in (ir.OP_WRITE, ir.OP_READ):
         transfers = -(-(words * 4) // 64)       # charge_burst
-        dt = f32(cfg.tRC + transfers * 6.0)
+        dt = f32(burst_time_ns(words * 4, cfg))
         yield ([dt, f32(cfg.e_act), f32(cfg.e_pre), 0.0,
                 f32(transfers * cfg.e_burst_per_64b),
                 dt * f32(cfg.p_background)],
@@ -147,8 +148,7 @@ def cost_summary(program: ir.PimProgram, cfg: DDR3Timing = DEFAULT_TIMING,
                       i_tab.sum(axis=0).tolist() if len(i_tab) else [0] * 6))
     n_ref = 0
     if refresh:
-        n_ref = int(t // cfg.tREFI)
-        n_ref = int((t + n_ref * cfg.tRFC) // cfg.tREFI)
+        n_ref = refresh_events_scalar(t, cfg)
         t += n_ref * cfg.tRFC
         e_ref += n_ref * cfg.e_ref
         e_bg += n_ref * cfg.tRFC * cfg.p_background

@@ -5,18 +5,24 @@ The paper's §5.1.4 configuration is 2 channels × 2 ranks × 8 banks/rank =
 32 independently-operating banks; each bank stacks ``subarrays`` (S)
 :class:`~.state.SubarrayState` units (SIMDRAM allocates μPrograms across
 subarrays the same way). A ``(bank, sub)`` pair is a *slot*; slots execute
-concurrently (separate row buffers and sense amplifiers) but share the
-command bus, so the device-level wall clock is
+concurrently (separate row buffers and sense amplifiers) but share their
+channel's command/data bus, so the device-level wall clock is
 
-    wall = bus serialization + max over slots of in-slot execution time
-    energy = sum over slots                      (the paper's constant nJ/op)
+    wall = max over channels of serialized bus occupancy
+         + max over slots of in-slot execution time
+         + link-contended COPY drain                  (see ``schedule.py``)
+    energy = sum over slots                (the paper's constant nJ/op)
 
-Bus serialization charges each slot's per-burst ``ISSUE`` overhead
-(``DDR3Timing.t_issue``) back-to-back: the memory controller can only drive
-one command burst onto a channel at a time, while the activated slots then
-run their streams in parallel. With one bank of one subarray this
-degenerates to exactly the single-subarray meter (issue + execution), which
-is what keeps device runs bit-comparable to the PR-1 executor.
+Bus occupancy charges each slot's per-burst ``ISSUE`` overhead
+(``DDR3Timing.t_issue``) AND its off-chip HOSTW/HOSTR burst windows
+(``timing.burst_time_ns``) back-to-back *per channel*: a memory controller
+can only drive one command burst / data transfer onto a channel at a time,
+channels operate independently, and consecutive bursts targeting different
+ranks of one channel pay the ``tRTRS`` bus-turnaround penalty. The
+activated slots then run their streams in parallel. With one bank of one
+subarray this degenerates to exactly the single-subarray meter (issue +
+host bursts + execution), which is what keeps device runs bit-comparable
+to the PR-1 executor.
 
 Adjacent subarrays of one bank are additionally linked by LISA-style
 row-buffer movement: a ``COPY`` IR op moves a row between them at
@@ -36,10 +42,11 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ir
 from .state import NUM_ROWS, ROW_WORDS, SubarrayState, make_subarray
-from .timing import DDR3Timing, DEFAULT_TIMING
+from .timing import DDR3Timing, DEFAULT_TIMING, burst_time_ns
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,15 +114,23 @@ def paper_device(n_banks: int, num_rows: int = NUM_ROWS,
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["banks"],
-    meta_fields=["config"],
+    meta_fields=["config", "host_credit_ns"],
 )
 @dataclasses.dataclass
 class DeviceState:
     """All subarrays of one device; every ``banks`` leaf has a leading
-    ``(n_banks * subarrays,)`` slot axis (slot ``b*S + s``)."""
+    ``(n_banks * subarrays,)`` slot axis (slot ``b*S + s``).
+
+    ``host_credit_ns`` is the async-host-engine double-buffer window: the
+    previous ``schedule`` step's compute+copy wall time, against which the
+    *next* step's off-chip HOSTW/HOSTR bursts may overlap when scheduled
+    with ``async_host=True`` (Shared-PIM-style concurrent data flow). It is
+    plain bookkeeping — zero on a fresh device, rewritten by every step,
+    and only consumed in async mode."""
 
     banks: SubarrayState
     config: DeviceConfig
+    host_credit_ns: float = 0.0
 
     @property
     def n_banks(self) -> int:
@@ -139,8 +154,12 @@ class DeviceState:
         return jax.tree_util.tree_map(
             lambda x: x[i:i + self.config.subarrays], self.banks)
 
-    def with_banks(self, banks: SubarrayState) -> "DeviceState":
-        return DeviceState(banks=banks, config=self.config)
+    def with_banks(self, banks: SubarrayState,
+                   host_credit_ns: float | None = None) -> "DeviceState":
+        return DeviceState(banks=banks, config=self.config,
+                           host_credit_ns=(self.host_credit_ns
+                                           if host_credit_ns is None
+                                           else float(host_credit_ns)))
 
 
 def make_device(config: DeviceConfig, reserve: bool = True) -> DeviceState:
@@ -156,18 +175,79 @@ def make_device(config: DeviceConfig, reserve: bool = True) -> DeviceState:
                        config=config)
 
 
-def bus_time_ns(program: ir.PimProgram | None,
-                timing: DDR3Timing = DEFAULT_TIMING) -> float:
-    """Command-bus occupancy of one slot's stream: its ISSUE bursts are the
-    only part that serializes device-wide."""
+def issue_bus_ns(program: ir.PimProgram | None,
+                 timing: DDR3Timing = DEFAULT_TIMING) -> float:
+    """Command-bus occupancy of one slot's ISSUE bursts."""
     if program is None:
         return 0.0
     n_issue = sum(1 for o in program.ops if o.op == ir.OP_ISSUE)
     return n_issue * timing.t_issue
 
 
+def host_bus_ns(program: ir.PimProgram | None,
+                timing: DDR3Timing = DEFAULT_TIMING) -> float:
+    """Channel occupancy of one slot's off-chip HOSTW/HOSTR bursts — the
+    part of the stream that streams data over the channel and therefore
+    cannot overlap with another slot's bursts on the SAME channel."""
+    if program is None:
+        return 0.0
+    row_bytes = program.words * 4
+    n_host = sum(1 for o in program.ops
+                 if o.op in (ir.OP_WRITE, ir.OP_READ))
+    return n_host * burst_time_ns(row_bytes, timing)
+
+
+def bus_time_ns(program: ir.PimProgram | None,
+                timing: DDR3Timing = DEFAULT_TIMING) -> float:
+    """Total per-channel bus occupancy of one slot's stream: ISSUE bursts
+    plus off-chip HOSTW/HOSTR burst windows. (Before the channel-aware
+    model, only ISSUE counted — off-chip bursts were free on the wall
+    clock.)"""
+    return issue_bus_ns(program, timing) + host_bus_ns(program, timing)
+
+
+def channel_bus_model(cfg: DeviceConfig, issue_slot, host_slot, *,
+                      host_credit_ns: float = 0.0):
+    """Serialize per-slot bus occupancy FCFS per channel.
+
+    ``issue_slot`` / ``host_slot`` are length-``n_slots`` arrays of each
+    slot's ISSUE / host-burst occupancy. Slots are served in slot order on
+    their bank's channel; consecutive bus-active slots on one channel that
+    sit in different ranks charge one ``tRTRS`` bus-turnaround penalty.
+    ``host_credit_ns`` is the async-host overlap window: up to that much of
+    each channel's HOST traffic is hidden under the *previous* step's
+    compute (each channel's transfer engine overlaps the same window —
+    channels stream independently).
+
+    Returns ``(busy, switch_ns, hidden_ns)``: per-channel serialized
+    occupancy (float array, switch penalties included, overlap deducted),
+    the total rank-switch penalty, and the total host time hidden.
+    """
+    issue_slot = np.asarray(issue_slot, np.float64)
+    host_slot = np.asarray(host_slot, np.float64)
+    issue_ch = np.zeros(cfg.channels)
+    host_ch = np.zeros(cfg.channels)
+    switch_ch = np.zeros(cfg.channels)
+    last_rank: list = [None] * cfg.channels
+    for k in range(cfg.n_slots):
+        if issue_slot[k] + host_slot[k] <= 0.0:
+            continue
+        ch, rk, _ = cfg.bank_coords(k // cfg.subarrays)
+        issue_ch[ch] += issue_slot[k]
+        host_ch[ch] += host_slot[k]
+        if last_rank[ch] is not None and last_rank[ch] != rk:
+            switch_ch[ch] += cfg.timing.tRTRS
+        last_rank[ch] = rk
+    hidden = np.minimum(host_ch, max(float(host_credit_ns), 0.0))
+    busy = issue_ch + host_ch - hidden + switch_ch
+    return busy, float(switch_ch.sum()), float(hidden.sum())
+
+
 def device_wall_ns(bus_ns, exec_ns) -> jnp.ndarray:
-    """wall = serialized bus traffic + slowest slot's in-slot execution."""
+    """Legacy device-wide serialization: wall = Σ bus + max exec. Kept as
+    the A/B reference against the channel-aware model (``schedule`` now
+    uses ``channel_bus_model``); for one channel with no rank switches the
+    two agree — ``tests/test_pim_channels.py`` pins that equivalence."""
     bus_ns = jnp.asarray(bus_ns, jnp.float32)
     exec_ns = jnp.asarray(exec_ns, jnp.float32)
     return jnp.sum(bus_ns) + (jnp.max(exec_ns) if exec_ns.size

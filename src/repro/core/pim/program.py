@@ -26,7 +26,7 @@ from . import isa
 from .compile import CompiledProgram, compile_program
 from .ir import PimProgram, ProgramBuilder
 from .state import SubarrayState, make_subarray
-from .timing import DDR3Timing, DEFAULT_TIMING
+from .timing import DDR3Timing, DEFAULT_TIMING, refresh_events_scalar
 
 
 def shift_k(state: SubarrayState, src, dst, k: int,
@@ -139,8 +139,7 @@ def estimate_cost(n_shifts: int = 0, n_aaps: int = 0, n_tras: int = 0,
     """Static (no-trace) cost model for planning PIM programs."""
     t = (n_shifts * cfg.t_shift + n_aaps * cfg.t_aap + n_tras * cfg.tRC
          + cfg.t_issue)
-    n_ref = int(t // cfg.tREFI)
-    n_ref = int((t + n_ref * cfg.tRFC) // cfg.tREFI)
+    n_ref = refresh_events_scalar(t, cfg)
     t += n_ref * cfg.tRFC
     e_act = (n_shifts * 8 + n_aaps * 2 + n_tras) * cfg.e_act \
         + n_tras * 2 * cfg.e_act_extra_row

@@ -23,12 +23,29 @@ charges ``timing.copy_cost`` onto the **source** slot's meter — no HOSTR/
 HOSTW, no off-chip burst energy. Same-slot COPYs stay in-stream (they are
 ordinary distance-0 LISA copies the executor runs directly).
 
+The drain itself is *link-contended*: every inter-subarray RBM link
+(``(bank, i)`` joins subarrays ``i``/``i+1``) and every channel's shared
+internal bus is a FCFS resource. Copies are served in drain order; a copy
+holds every link it crosses (plus the internal bus(es) for inter-bank
+moves) for its full duration, so massive gathers queue instead of
+draining for free. An inter-bank copy pays real RBM hops too: source
+subarray → bank edge (subarray 0, where the internal bus taps the bank)
+and edge → destination subarray.
+
 Device accounting (see ``device.py``): per-slot meters accumulate each
-slot's own busy time; the schedule-level wall clock is
+slot's own busy time; the schedule-level wall clock is channel-aware:
 
-    wall = Σ_k bus_k  +  max_k (Δtime_k − bus_k)        energy = Σ_k Δenergy_k
+    wall = max_ch chan_busy_ch + max_k (Δt_k − bus_k) + copy drain makespan
+    energy = Σ_k Δenergy_k
 
-where ``bus_k`` is slot k's serialized per-burst ``ISSUE`` occupancy.
+where ``bus_k`` is slot k's bus occupancy (ISSUE bursts AND off-chip
+HOSTW/HOSTR burst windows) and ``chan_busy_ch`` serializes the occupancy
+of channel ``ch``'s slots FCFS, charging ``tRTRS`` between bursts that
+switch rank. With ``async_host=True`` (Shared-PIM-style double buffering)
+each channel's HOST traffic first overlaps the *previous* step's
+compute+copy window (``DeviceState.host_credit_ns``), so multi-step
+pipelines pay ``max(transfer, compute)`` instead of the sum — bits,
+reads, and energy are identical to the sync schedule.
 
 ``shard_rows`` / ``shard_lanes`` partition one large host buffer into
 per-slot programs (row-wise or lane-wise, optionally across the subarray
@@ -49,7 +66,8 @@ import numpy as np
 from . import exec as pim_exec
 from . import ir
 from .compile import CompiledProgram, compile_program
-from .device import DeviceConfig, DeviceState, bus_time_ns, device_wall_ns
+from .device import (DeviceConfig, DeviceState, channel_bus_model,
+                     host_bus_ns, issue_bus_ns)
 from .ir import PimProgram, ProgramBuilder
 from .state import NUM_ROWS
 from .timing import DDR3Timing, copy_cost
@@ -60,12 +78,21 @@ class ScheduleResult:
     """Outcome of one device-level schedule step."""
 
     state: DeviceState
-    wall_ns: jax.Array          # bus serialization + max in-slot exec
-    bus_ns: jax.Array           # serialized command-bus occupancy
+    wall_ns: jax.Array          # max-channel bus + max in-slot exec + copies
+    bus_ns: jax.Array           # total bus occupancy, summed over slots
     energy_nj: jax.Array        # summed across slots (this step only)
     reads: tuple                # per slot: host-read rows in slot order
-    copy_ns: float = 0.0        # in-DRAM COPY time drained this step
+    copy_ns: float = 0.0        # COPY drain *makespan* (link-contended wall)
     host_bytes: int = 0         # off-chip bytes this step's streams moved
+    host_bus_ns: float = 0.0    # HOSTW/HOSTR burst occupancy, Σ over slots
+    channel_bus_ns: tuple = ()  # per-channel serialized occupancy (+tRTRS)
+    rank_switch_ns: float = 0.0  # total tRTRS penalty charged this step
+    host_overlap_ns: float = 0.0  # host time hidden under prev step (async)
+    copy_total_ns: float = 0.0  # Σ per-copy duration (old copy_ns meaning)
+    copy_queue_ns: float = 0.0  # Σ FCFS waiting behind busy links/buses
+    link_busy_ns: dict = dataclasses.field(default_factory=dict)
+    # per-resource occupancy: ("link", bank, i) RBM link between subarrays
+    # i/i+1, ("ibus", channel) the channel's shared internal bus.
 
 
 def stream_key(p: PimProgram):
@@ -77,18 +104,22 @@ def stream_key(p: PimProgram):
 
 # One compiled artifact per distinct (stream, timing): groups recur across
 # schedule() calls (e.g. PimVM flushes), so keep the jitted runners warm.
-# FIFO-bounded — long sessions stream many one-off programs through here.
+# LRU-bounded — long sessions stream many one-off programs through here,
+# and insertion-order (FIFO) eviction would let them push out hot
+# recurring streams.
 _compile_cache: dict = {}
 _COMPILE_CACHE_MAX = 512
 
 
 def _compiled_for(program: PimProgram, timing: DDR3Timing) -> CompiledProgram:
     key = (stream_key(program), timing)
-    if key not in _compile_cache:
+    hit = _compile_cache.pop(key, None)
+    if hit is None:
         if len(_compile_cache) >= _COMPILE_CACHE_MAX:
             _compile_cache.pop(next(iter(_compile_cache)))
-        _compile_cache[key] = compile_program(program, timing)
-    return _compile_cache[key]
+        hit = compile_program(program, timing)
+    _compile_cache[key] = hit           # (re)insert at the MRU end
+    return hit
 
 
 def _payload_stack(programs: Sequence[PimProgram], words: int) -> jnp.ndarray:
@@ -169,11 +200,50 @@ def _split_copies(cfg: DeviceConfig, slot: int, program: PimProgram):
                       payloads=program.payloads), deferred
 
 
+@dataclasses.dataclass
+class CopyDrainStats:
+    """Link-contention accounting of one step's COPY drain phase."""
+
+    makespan_ns: float = 0.0    # FCFS queue-model wall of the drain
+    total_ns: float = 0.0       # Σ per-copy duration (contention-free sum)
+    queue_ns: float = 0.0       # Σ time copies waited behind busy resources
+    link_busy_ns: dict = dataclasses.field(default_factory=dict)
+
+
+def _copy_route(cfg: DeviceConfig, src_slot: int, dst_slot: int):
+    """(hops, inter_bank, resources) of one cross-slot copy.
+
+    Intra-bank: RBM hops between the two subarrays, crossing links
+    ``(bank, i)`` for i in [min, max). Inter-bank: the row rides RBM links
+    from the source subarray to the bank edge (subarray 0, where the
+    chip's internal bus taps the bank), crosses the channel's shared
+    internal bus, and rides links from the destination's edge inward —
+    so an S-1 → S-1 move costs 2(S-1) hops on top of ``t_copy_bank``.
+    """
+    S = cfg.subarrays
+    sb, ss = divmod(src_slot, S)
+    db, ds = divmod(dst_slot, S)
+    if sb == db:
+        hops = abs(ds - ss)
+        res = [("link", sb, i) for i in range(min(ss, ds), max(ss, ds))]
+        return hops, False, res
+    hops = ss + ds
+    res = [("link", sb, i) for i in range(ss)]
+    res += [("link", db, i) for i in range(ds)]
+    s_ch = cfg.bank_coords(sb)[0]
+    d_ch = cfg.bank_coords(db)[0]
+    res.append(("ibus", s_ch))
+    if d_ch != s_ch:
+        res.append(("ibus", d_ch))
+    return hops, True, res
+
+
 def _apply_copies(cfg: DeviceConfig, banks, deferred):
     """Drain deferred cross-slot copies on the post-compute state: move the
-    rows in (slot, stream-position) order and charge ``copy_cost`` onto each
-    source slot's meter. Returns (banks', total_copy_ns)."""
-    S, t = cfg.subarrays, cfg.timing
+    rows in (slot, stream-position) order, charge ``copy_cost`` onto each
+    source slot's meter, and serialize contended links/buses FCFS in the
+    same order. Returns (banks', CopyDrainStats)."""
+    t = cfg.timing
     n = cfg.n_slots
     dt = np.zeros(n, np.float32)
     e_act = np.zeros(n, np.float32)
@@ -194,11 +264,10 @@ def _apply_copies(cfg: DeviceConfig, banks, deferred):
     else:
         for src_slot, dst_slot, op in deferred:
             bits = bits.at[dst_slot, op.b].set(bits[src_slot, op.a])
+    stats = CopyDrainStats()
+    ready: dict = {}                    # resource -> busy-until (drain clock)
     for src_slot, dst_slot, op in deferred:
-        sb, ss = divmod(src_slot, S)
-        db, ds = divmod(dst_slot, S)
-        inter_bank = sb != db
-        hops = abs(ds - ss) if not inter_bank else 0
+        hops, inter_bank, resources = _copy_route(cfg, src_slot, dst_slot)
         c_dt, c_ea, c_ep, c_na, c_np, c_naap = copy_cost(hops, inter_bank, t)
         dt[src_slot] += np.float32(c_dt)
         e_act[src_slot] += np.float32(c_ea)
@@ -206,6 +275,14 @@ def _apply_copies(cfg: DeviceConfig, banks, deferred):
         n_act[src_slot] += c_na
         n_pre[src_slot] += c_np
         n_aap[src_slot] += c_naap
+        start = max((ready.get(r, 0.0) for r in resources), default=0.0)
+        end = start + c_dt
+        for r in resources:
+            ready[r] = end
+            stats.link_busy_ns[r] = stats.link_busy_ns.get(r, 0.0) + c_dt
+        stats.queue_ns += start
+        stats.total_ns += c_dt
+        stats.makespan_ns = max(stats.makespan_ns, end)
     m = banks.meter
     meter = dataclasses.replace(
         m,
@@ -217,14 +294,15 @@ def _apply_copies(cfg: DeviceConfig, banks, deferred):
         n_act=m.n_act + jnp.asarray(n_act),
         n_pre=m.n_pre + jnp.asarray(n_pre),
         n_aap=m.n_aap + jnp.asarray(n_aap))
-    return dataclasses.replace(banks, bits=bits, meter=meter), float(dt.sum())
+    return dataclasses.replace(banks, bits=bits, meter=meter), stats
 
 
 def schedule(device: DeviceState,
              programs, *,
              use_kernels: bool | None = None,
              interpret: bool | None = None,
-             refresh: bool = False) -> ScheduleResult:
+             refresh: bool = False,
+             async_host: bool = False) -> ScheduleResult:
     """Run one program per slot (``None`` = idle slot) and fold the device
     timing model over the per-slot meters.
 
@@ -238,6 +316,13 @@ def schedule(device: DeviceState,
     (``timing.apply_refresh``); the fold is incremental against the meter's
     ``n_refresh`` history, so repeated refreshed schedules on one device
     charge every event exactly once.
+
+    ``async_host=True`` models a Shared-PIM-style asynchronous host-transfer
+    engine: this step's HOSTW/HOSTR bursts overlap the *previous* step's
+    compute+copy window (``device.host_credit_ns``), double-buffered, so a
+    multi-step pipeline pays ``max(transfer, compute)`` per step instead of
+    the sum. Only the wall clock changes — states, reads, and energy are
+    identical to the synchronous schedule.
     """
     cfg = device.config
     flat = _normalize_programs(cfg, programs)
@@ -267,7 +352,8 @@ def schedule(device: DeviceState,
     e0 = jnp.asarray(banks.meter.total_energy_nj)
     new_banks = banks
     reads: list[tuple] = [() for _ in range(cfg.n_slots)]
-    bus = np.zeros(cfg.n_slots, np.float32)
+    issue_bus = np.zeros(cfg.n_slots, np.float32)
+    host_bus = np.zeros(cfg.n_slots, np.float32)
 
     for key, slot_ids in groups.items():
         group_progs = [stripped[k] for k in slot_ids]
@@ -281,27 +367,45 @@ def schedule(device: DeviceState,
             sub, _payload_stack(group_progs, cfg.words))
         new_banks = jax.tree_util.tree_map(
             lambda full, upd: full.at[idx].set(upd), new_banks, out)
-        group_bus = bus_time_ns(group_progs[0], cfg.timing)
+        group_issue = issue_bus_ns(group_progs[0], cfg.timing)
+        group_host = host_bus_ns(group_progs[0], cfg.timing)
         for j, k in enumerate(slot_ids):
             reads[k] = tuple(r[j] for r in group_reads)
-            bus[k] = group_bus
+            issue_bus[k] = group_issue
+            host_bus[k] = group_host
 
-    copy_ns = 0.0
+    # In-slot execution excludes each slot's own bus occupancy and the
+    # drained copies (accounted by the contention model below).
+    bus_j = jnp.asarray(issue_bus + host_bus)
+    exec_ns = jnp.asarray(new_banks.meter.time_ns) - t0 - bus_j
+
+    copies = CopyDrainStats()
     if deferred:
-        new_banks, copy_ns = _apply_copies(cfg, new_banks, deferred)
+        new_banks, copies = _apply_copies(cfg, new_banks, deferred)
 
-    t1 = jnp.asarray(new_banks.meter.time_ns)
     e1 = jnp.asarray(new_banks.meter.total_energy_nj)
-    bus_j = jnp.asarray(bus)
-    exec_ns = t1 - t0 - bus_j
+    chan_busy, switch_ns, hidden_ns = channel_bus_model(
+        cfg, issue_bus, host_bus,
+        host_credit_ns=device.host_credit_ns if async_host else 0.0)
+    compute_ns = (jnp.max(exec_ns) if exec_ns.size else jnp.float32(0.0)) \
+        + jnp.float32(copies.makespan_ns)
+    wall = jnp.float32(chan_busy.max()) + compute_ns
     return ScheduleResult(
-        state=device.with_banks(new_banks),
-        wall_ns=device_wall_ns(bus_j, exec_ns),
+        state=device.with_banks(new_banks,
+                                host_credit_ns=float(compute_ns)),
+        wall_ns=wall,
         bus_ns=jnp.sum(bus_j),
         energy_nj=jnp.sum(e1 - e0),
         reads=tuple(reads),
-        copy_ns=copy_ns,
-        host_bytes=sum(p.host_bytes for p in flat if p is not None))
+        copy_ns=copies.makespan_ns,
+        host_bytes=sum(p.host_bytes for p in flat if p is not None),
+        host_bus_ns=float(host_bus.sum()),
+        channel_bus_ns=tuple(float(x) for x in chan_busy),
+        rank_switch_ns=switch_ns,
+        host_overlap_ns=hidden_ns,
+        copy_total_ns=copies.total_ns,
+        copy_queue_ns=copies.queue_ns,
+        link_busy_ns=dict(copies.link_busy_ns))
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 
 from .state import CostMeter
@@ -33,6 +34,7 @@ class DDR3Timing:
     tRC: float = 49.5           # tRAS + tRP
     tREFI: float = 7_800.0      # refresh interval
     tRFC: float = 260.0         # refresh cycle, 4Gb DDR3
+    tRTRS: float = 3.0          # rank-to-rank switch (2 tCK bus turnaround)
     t_issue: float = 10.5       # command-bus issue overhead per op burst (7 tCK)
 
     # Energy. E_ACT covers one full-row (8KB) activation + restore.
@@ -147,26 +149,60 @@ def charge_issue(meter: CostMeter,
     return _bump(meter, dt=cfg.t_issue, cfg=cfg)
 
 
+def refresh_events(busy, cfg: DDR3Timing = DEFAULT_TIMING):
+    """Refresh events owed for ``busy`` ns of stall-free work: the true
+    fixed point of  n = floor((busy + n·tRFC) / tREFI).
+
+    Each event's tRFC stall extends the wall clock, which can cross further
+    tREFI boundaries — on multi-millisecond streams the cascade crosses more
+    than one, so a single re-count undercounts. The count is iterated to
+    convergence (monotone, so the loop reaches the least fixed point — the
+    same n a step-by-step tREFI walk produces); element-wise on arrays.
+    """
+    busy = jnp.asarray(busy, jnp.float32)
+
+    def recount(k):
+        return jnp.floor((busy + k.astype(jnp.float32) * cfg.tRFC)
+                         / cfg.tREFI).astype(jnp.int32)
+
+    n0 = jnp.floor(busy / cfg.tREFI).astype(jnp.int32)
+    _, n = jax.lax.while_loop(
+        lambda c: jnp.any(c[1] > c[0]),
+        lambda c: (c[1], recount(c[1])),
+        (jnp.full_like(n0, -1), n0))
+    return n
+
+
+def refresh_events_scalar(busy_ns: float,
+                          cfg: DDR3Timing = DEFAULT_TIMING) -> int:
+    """Python-scalar counterpart of :func:`refresh_events` for the
+    closed-form float64 planners (``compile.cost_summary``,
+    ``program.estimate_cost``): same least fixed point, no tracing."""
+    n = int(busy_ns // cfg.tREFI)
+    while int((busy_ns + n * cfg.tRFC) // cfg.tREFI) > n:
+        n = int((busy_ns + n * cfg.tRFC) // cfg.tREFI)
+    return n
+
+
 def apply_refresh(meter: CostMeter,
                   cfg: DDR3Timing = DEFAULT_TIMING) -> CostMeter:
     """Fold in periodic refresh for the elapsed busy time — incrementally.
 
     NVMain interleaves REF every tREFI; we post-process: the meter owes
-    n = floor(busy/tREFI) refresh events in total, each adding tRFC stall
-    and e_ref energy (self-consistently re-counted once against the
-    stall-extended time). ``busy`` is the meter's wall time with previously
+    n refresh events in total (the ``refresh_events`` fixed point: stalls
+    extend wall time past further tREFI boundaries), each adding tRFC stall
+    and e_ref energy. ``busy`` is the meter's wall time with previously
     charged refresh stalls stripped (``n_refresh`` events × tRFC), and only
     the events *not yet charged* are added — so repeated application on an
     accumulating meter (e.g. back-to-back refreshed ``schedule()`` calls on
     one device) counts every event exactly once instead of re-charging the
-    whole history per call. On a never-refreshed meter this reduces to the
-    single-shot formula bit-for-bit.
+    whole history per call. On a never-refreshed meter whose stalls cross at
+    most one extra boundary this reduces to the old single-re-count formula
+    bit-for-bit.
     """
     prior = meter.n_refresh.astype(jnp.float32)
     busy = meter.time_ns - prior * cfg.tRFC
-    n = jnp.floor(busy / cfg.tREFI).astype(jnp.int32)
-    # One fixed-point re-count: stalls extend wall time past further tREFIs.
-    n = jnp.floor((busy + n * cfg.tRFC) / cfg.tREFI).astype(jnp.int32)
+    n = refresh_events(busy, cfg)
     new = jnp.maximum(n - meter.n_refresh, 0)
     return CostMeter(
         time_ns=meter.time_ns + new * cfg.tRFC,
@@ -181,12 +217,20 @@ def apply_refresh(meter: CostMeter,
     )
 
 
+def burst_time_ns(num_bytes: int, cfg: DDR3Timing = DEFAULT_TIMING) -> float:
+    """Wall time of one off-chip HOSTW/HOSTR transfer: an ACT+PRE row access
+    plus the data beats. DDR3-1333: 64B burst = 8 beats of 8B at 0.75
+    ns/beat. This whole window occupies the slot's channel (command +
+    data bus), so the device model serializes it per channel."""
+    transfers = -(-num_bytes // 64)
+    return cfg.tRC + transfers * 6.0
+
+
 def charge_burst(meter: CostMeter, num_bytes: int,
                  cfg: DDR3Timing = DEFAULT_TIMING) -> CostMeter:
     """Off-chip data transfer: one ACT+PRE plus burst energy+time."""
     transfers = -(-num_bytes // 64)
-    # DDR3-1333: 64B burst = 8 beats of 8B at 0.75 ns/beat.
-    dt = cfg.tRC + transfers * 6.0
+    dt = burst_time_ns(num_bytes, cfg)
     m = _bump(meter, dt=dt, e_act=cfg.e_act, e_pre=cfg.e_pre,
               n_act=1, n_pre=1, cfg=cfg)
     return CostMeter(

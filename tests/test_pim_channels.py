@@ -1,0 +1,399 @@
+"""Channel-aware bus model, async host engine, COPY link contention.
+
+Locks down the device timing model rework: per-channel FCFS serialization
+of ISSUE + HOSTW/HOSTR burst windows (channels overlap, rank switches pay
+tRTRS), the Shared-PIM-style async host-transfer engine (double-buffered
+against the previous step's compute window), the FCFS link/internal-bus
+queue model for drained COPYs, the LRU compile cache, and the true
+fixed-point refresh re-count.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import importlib
+
+from repro.core import pim
+from repro.core.pim import exec as pim_exec
+
+# the package re-exports schedule() the function, shadowing the module
+pim_schedule = importlib.import_module("repro.core.pim.schedule")
+
+WORDS = 8
+ROWS = 32
+T = pim.DEFAULT_TIMING
+
+
+def _rand_row(rng, words=WORDS):
+    return rng.integers(0, 2**32, (words,), dtype=np.uint32)
+
+
+def _host_shift_prog(data, k, rows=ROWS, words=WORDS):
+    b = pim.ProgramBuilder(rows, words)
+    b.issue()
+    b.write_row(0, data)
+    b.shift_k(0, 1, k)
+    b.read_row(1)
+    return b.build()
+
+
+def _cfg(channels, ranks, banks_per_rank, subarrays=1):
+    return pim.DeviceConfig(channels=channels, ranks=ranks,
+                            banks_per_rank=banks_per_rank,
+                            subarrays=subarrays, num_rows=ROWS, words=WORDS)
+
+
+# ---------------------------------------------------------------------------
+# Per-channel bus serialization
+# ---------------------------------------------------------------------------
+
+def test_bus_time_counts_issue_and_host_bursts():
+    rng = np.random.default_rng(0)
+    p = _host_shift_prog(_rand_row(rng), 3)
+    burst = pim.burst_time_ns(WORDS * 4, T)
+    assert pim.issue_bus_ns(p, T) == pytest.approx(T.t_issue)
+    assert pim.host_bus_ns(p, T) == pytest.approx(2 * burst)  # HOSTW + HOSTR
+    assert pim.bus_time_ns(p, T) == pytest.approx(T.t_issue + 2 * burst)
+    assert pim.bus_time_ns(None, T) == 0.0
+
+
+def test_single_slot_wall_is_the_subarray_meter():
+    """1-channel, 1-slot: bus + exec telescopes back to the meter exactly —
+    the PR-3 degenerate contract survives host bursts entering bus time."""
+    rng = np.random.default_rng(1)
+    prog = _host_shift_prog(_rand_row(rng), 9)
+    res = pim.schedule(pim.make_device(_cfg(1, 1, 1)), [prog])
+    ref = pim_exec.execute(prog, pim.reserve_control_rows(
+        pim.make_subarray(ROWS, WORDS)))
+    assert float(res.wall_ns) == pytest.approx(
+        float(ref.state.meter.time_ns), rel=1e-6)
+
+
+def test_two_channels_overlap_bursts():
+    """Work on both channels: the channel-aware wall sits strictly below
+    the device-wide-serialized (PR-3) wall; states and reads bit-exact."""
+    rng = np.random.default_rng(2)
+    progs = [_host_shift_prog(_rand_row(rng), 4) for _ in range(4)]
+    r1 = pim.schedule(pim.make_device(_cfg(1, 1, 4)), progs)
+    r2 = pim.schedule(pim.make_device(_cfg(2, 1, 2)), progs)
+    # 1 channel, 1 rank == the legacy device-wide serialization
+    buses = [pim.bus_time_ns(p, T) for p in progs]
+    exec_ns = np.asarray(r1.state.banks.meter.time_ns) - np.asarray(buses)
+    legacy = pim.device_wall_ns(buses, exec_ns)
+    assert float(r1.wall_ns) == pytest.approx(float(legacy), rel=1e-6)
+    assert float(r2.wall_ns) < float(r1.wall_ns)
+    assert len(r2.channel_bus_ns) == 2
+    assert sum(r2.channel_bus_ns) == pytest.approx(sum(buses), rel=1e-6)
+    assert np.array_equal(np.asarray(r1.state.banks.bits),
+                          np.asarray(r2.state.banks.bits))
+    for a, b in zip(r1.reads, r2.reads):
+        for x, y in zip(a, b):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_two_channels_equal_when_one_channel_idle():
+    """All work placed on channel 0 of a 2-channel device == the same work
+    on a 1-channel device of that shape."""
+    rng = np.random.default_rng(3)
+    progs = [_host_shift_prog(_rand_row(rng), 4) for _ in range(2)]
+    r1 = pim.schedule(pim.make_device(_cfg(1, 1, 2)), progs)
+    r2 = pim.schedule(pim.make_device(_cfg(2, 1, 2)), progs + [None, None])
+    assert float(r2.wall_ns) == pytest.approx(float(r1.wall_ns), rel=1e-6)
+    assert r2.channel_bus_ns[1] == 0.0
+
+
+def test_rank_switch_penalty_counted_per_transition():
+    rng = np.random.default_rng(4)
+    prog = _host_shift_prog(_rand_row(rng), 2)
+    # 1 channel x 2 ranks x 2 banks/rank; bank order 0,1 (rank 0), 2,3
+    # (rank 1): active banks (0, 2) switch rank once
+    r = pim.schedule(pim.make_device(_cfg(1, 2, 2)),
+                     [prog, None, prog, None])
+    assert r.rank_switch_ns == pytest.approx(T.tRTRS)
+    # same-rank banks: no switch
+    r0 = pim.schedule(pim.make_device(_cfg(1, 2, 2)),
+                      [prog, prog, None, None])
+    assert r0.rank_switch_ns == 0.0
+    assert float(r.wall_ns) - float(r0.wall_ns) == pytest.approx(
+        T.tRTRS, abs=1e-3)
+    # four active banks in slot order 0,1,2,3 -> one rank transition
+    r4 = pim.schedule(pim.make_device(_cfg(1, 2, 2)), [prog] * 4)
+    assert r4.rank_switch_ns == pytest.approx(T.tRTRS)
+
+
+def test_wall_invariant_two_channels_never_worse():
+    """For ANY placement, splitting the same banks across 2 channels never
+    increases the wall (channels only add overlap)."""
+    rng = np.random.default_rng(5)
+    for seed in range(8):
+        r = np.random.default_rng(seed)
+        progs = [_host_shift_prog(_rand_row(rng), int(r.integers(1, 6)))
+                 if r.random() < 0.7 else None for _ in range(4)]
+        if all(p is None for p in progs):
+            continue
+        w1 = pim.schedule(pim.make_device(_cfg(1, 1, 4)), progs)
+        w2 = pim.schedule(pim.make_device(_cfg(2, 1, 2)), progs)
+        assert float(w2.wall_ns) <= float(w1.wall_ns) + 1e-3, seed
+
+
+# ---------------------------------------------------------------------------
+# Async host engine
+# ---------------------------------------------------------------------------
+
+def _pipeline(async_host, steps, cfg=None):
+    cfg = cfg or _cfg(1, 1, 2)
+    dev = pim.make_device(cfg)
+    walls, results = [], []
+    for progs in steps:
+        res = pim.schedule(dev, progs, async_host=async_host)
+        dev = res.state
+        walls.append(float(res.wall_ns))
+        results.append(res)
+    return walls, results, dev
+
+
+def test_async_host_overlaps_previous_compute():
+    rng = np.random.default_rng(6)
+    steps = [[_host_shift_prog(_rand_row(rng), 8) for _ in range(2)]
+             for _ in range(3)]
+    sw, sres, sdev = _pipeline(False, steps)
+    aw, ares, adev = _pipeline(True, steps)
+    # step 0 has no prior compute to hide behind: identical walls
+    assert aw[0] == pytest.approx(sw[0], rel=1e-6)
+    # later steps hide their host bursts under the previous compute window
+    for k in (1, 2):
+        assert aw[k] < sw[k]
+        assert ares[k].host_overlap_ns > 0.0
+        assert aw[k] == pytest.approx(
+            sw[k] - ares[k].host_overlap_ns, rel=1e-6)
+    # bits, reads, energy identical — only the wall accounting moves
+    assert np.array_equal(np.asarray(sdev.banks.bits),
+                          np.asarray(adev.banks.bits))
+    for rs, ra in zip(sres, ares):
+        assert float(rs.energy_nj) == pytest.approx(
+            float(ra.energy_nj), rel=1e-6)
+        for a, b in zip(rs.reads, ra.reads):
+            for x, y in zip(a, b):
+                assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_async_host_never_worse_than_sync():
+    rng = np.random.default_rng(7)
+    for seed in range(6):
+        r = np.random.default_rng(100 + seed)
+        steps = []
+        for _ in range(int(r.integers(2, 4))):
+            steps.append([
+                _host_shift_prog(_rand_row(rng), int(r.integers(1, 10)))
+                if r.random() < 0.8 else None for _ in range(2)])
+        sw, _, _ = _pipeline(False, steps)
+        aw, _, _ = _pipeline(True, steps)
+        for k, (s, a) in enumerate(zip(sw, aw)):
+            assert a <= s + 1e-3, (seed, k)
+
+
+def test_async_credit_is_the_previous_compute_window():
+    """The double buffer hides at most the previous step's compute+copy
+    time: a transfer-heavy step after a tiny compute step stays exposed."""
+    rng = np.random.default_rng(8)
+    tiny = [_host_shift_prog(_rand_row(rng), 1), None]
+    heavy = [_host_shift_prog(_rand_row(rng), 1) for _ in range(2)]
+    dev = pim.make_device(_cfg(1, 1, 2))
+    r0 = pim.schedule(dev, tiny, async_host=True)
+    credit = r0.state.host_credit_ns
+    r1 = pim.schedule(r0.state, heavy, async_host=True)
+    assert r1.host_overlap_ns == pytest.approx(credit, rel=1e-6)
+    assert r1.host_overlap_ns < r1.host_bus_ns
+
+
+# ---------------------------------------------------------------------------
+# COPY drain contention
+# ---------------------------------------------------------------------------
+
+def test_gather_serializes_on_internal_bus():
+    """N-1 inter-bank copies into bank 0 share one internal bus: makespan =
+    N-1 transfers back-to-back, FCFS queueing = 0 + dt + 2dt + ..."""
+    rng = np.random.default_rng(9)
+    n = 4
+    cfg = _cfg(1, 1, n)
+    load = [pim.ProgramBuilder(ROWS, WORDS).write_row(1, _rand_row(rng))
+            .build() for _ in range(n)]
+    state = pim.schedule(pim.make_device(cfg), load).state
+    moves = [((b, 0, 1), (0, 0, 1 + b)) for b in range(1, n)]
+    res = pim.schedule(state, pim.gather_rows(cfg, moves))
+    dt = T.t_aap + T.t_copy_bank
+    assert res.copy_ns == pytest.approx(3 * dt)
+    assert res.copy_total_ns == pytest.approx(3 * dt)
+    assert res.copy_queue_ns == pytest.approx((1 + 2) * dt)
+    assert res.link_busy_ns[("ibus", 0)] == pytest.approx(3 * dt)
+
+
+def test_intra_bank_copies_in_different_banks_overlap():
+    rng = np.random.default_rng(10)
+    cfg = _cfg(1, 1, 2, subarrays=2)
+    progs = []
+    for b in range(2):
+        pb = pim.ProgramBuilder(ROWS, WORDS)
+        pb.write_row(0, _rand_row(rng))
+        pb.copy_row(0, 1, dst_bank=b, dst_sub=1)
+        progs.append([pb.build(), None])
+    res = pim.schedule(pim.make_device(cfg), progs)
+    dt = T.t_aap + T.t_rbm
+    assert res.copy_total_ns == pytest.approx(2 * dt)
+    assert res.copy_ns == pytest.approx(dt)          # disjoint bank links
+    assert res.copy_queue_ns == 0.0
+
+
+def test_disjoint_links_within_one_bank_overlap():
+    """S=4: a sub0->sub1 copy (link 0) and a sub2->sub3 copy (link 2) use
+    different RBM links of the same bank and drain concurrently."""
+    rng = np.random.default_rng(11)
+    cfg = _cfg(1, 1, 1, subarrays=4)
+    p01 = pim.ProgramBuilder(ROWS, WORDS)
+    p01.write_row(0, _rand_row(rng))
+    p01.copy_row(0, 1, dst_bank=0, dst_sub=1)
+    p23 = pim.ProgramBuilder(ROWS, WORDS)
+    p23.write_row(0, _rand_row(rng))
+    p23.copy_row(0, 1, dst_bank=0, dst_sub=3)
+    res = pim.schedule(pim.make_device(cfg),
+                       [[p01.build(), None, p23.build(), None]])
+    dt = T.t_aap + T.t_rbm
+    assert res.copy_ns == pytest.approx(dt)
+    assert res.copy_queue_ns == 0.0
+    # overlapping spans (sub0->sub2 and sub1->sub3) DO contend on link 1
+    p02 = pim.ProgramBuilder(ROWS, WORDS)
+    p02.write_row(0, _rand_row(rng))
+    p02.copy_row(0, 1, dst_bank=0, dst_sub=2)
+    p13 = pim.ProgramBuilder(ROWS, WORDS)
+    p13.write_row(0, _rand_row(rng))
+    p13.copy_row(0, 1, dst_bank=0, dst_sub=3)
+    res2 = pim.schedule(pim.make_device(cfg),
+                        [[p02.build(), p13.build(), None, None]])
+    dt2 = T.t_aap + 2 * T.t_rbm
+    assert res2.copy_ns == pytest.approx(2 * dt2)
+    assert res2.copy_queue_ns == pytest.approx(dt2)
+
+
+def test_32_bank_gather_has_nonzero_queueing():
+    """Acceptance: a 32-bank gather shows nonzero COPY queueing delay."""
+    rng = np.random.default_rng(12)
+    cfg = pim.paper_device(32, num_rows=ROWS, words=WORDS)
+    load = [pim.ProgramBuilder(ROWS, WORDS).write_row(1, _rand_row(rng))
+            .build() for _ in range(32)]
+    state = pim.schedule(pim.make_device(cfg), load).state
+    moves = [((b, 0, 1), (0, 0, 2 + (b - 1) % 12)) for b in range(1, 32)]
+    res = pim.schedule(state, pim.gather_rows(cfg, moves))
+    assert res.copy_queue_ns > 0.0
+    assert res.copy_ns > T.t_aap + T.t_copy_bank          # not a single hop
+    # every copy lands on bank 0, so its channel's internal bus serializes
+    # the whole gather: makespan == contention-free sum
+    assert res.copy_ns == pytest.approx(res.copy_total_ns)
+    assert ("ibus", 0) in res.link_busy_ns
+    assert ("ibus", 1) in res.link_busy_ns
+    # split the gather across the two channels' hub banks (0 and 16) and
+    # the buses drain concurrently: makespan strictly below the sum
+    state2 = pim.schedule(pim.make_device(cfg), load).state
+    moves2 = [((b, 0, 1), (0, 0, 2 + (b - 1) % 12))
+              for b in range(1, 16)]
+    moves2 += [((b, 0, 1), (16, 0, 2 + (b - 17) % 12))
+               for b in range(17, 32)]
+    res2 = pim.schedule(state2, pim.gather_rows(cfg, moves2))
+    assert res2.copy_ns < res2.copy_total_ns
+    assert res2.copy_queue_ns > 0.0
+
+
+# ---------------------------------------------------------------------------
+# LRU compile cache
+# ---------------------------------------------------------------------------
+
+def test_compile_cache_is_lru_not_fifo(monkeypatch):
+    """A hot recurring stream must survive _COMPILE_CACHE_MAX distinct
+    one-off streams as long as it keeps being touched."""
+    monkeypatch.setattr(pim_schedule, "_COMPILE_CACHE_MAX", 8)
+    monkeypatch.setattr(pim_schedule, "_compile_cache", {})
+    cache = pim_schedule._compile_cache
+
+    def prog(k):
+        b = pim.ProgramBuilder(ROWS, WORDS)
+        for _ in range(k + 1):
+            b.rowclone(0, 1)
+        return b.build()
+
+    hot = prog(0)
+    hot_compiled = pim_schedule._compiled_for(hot, T)
+    hot_key = (pim.stream_key(hot), T)
+    for k in range(1, 9):                     # MAX distinct one-offs
+        pim_schedule._compiled_for(prog(k), T)
+        # the hot stream recurs between one-offs (PimVM-flush pattern)
+        assert pim_schedule._compiled_for(hot, T) is hot_compiled
+    assert hot_key in cache
+    assert len(cache) <= 8
+    # and a hit refreshes recency: the oldest untouched one-off is the
+    # eviction victim, not the hot key
+    assert (pim.stream_key(prog(1)), T) not in cache
+
+
+# ---------------------------------------------------------------------------
+# Refresh fixed point
+# ---------------------------------------------------------------------------
+
+def _ref_refresh_events(busy_ns: float, cfg) -> int:
+    """Step-by-step reference: walk tREFI boundaries one event at a time,
+    each event's tRFC stall extending the wall clock (float32, matching
+    the meter arithmetic)."""
+    busy = np.float32(busy_ns)
+    n = 0
+    while busy + np.float32(n) * np.float32(cfg.tRFC) \
+            >= np.float32(n + 1) * np.float32(cfg.tREFI):
+        n += 1
+    return n
+
+
+@pytest.mark.parametrize("busy_ms", [0.005, 0.9, 2.0, 7.7, 31.0, 123.4])
+def test_refresh_events_match_step_by_step_reference(busy_ms):
+    busy = busy_ms * 1e6
+    got = int(pim.refresh_events(jnp.float32(busy)))
+    assert got == _ref_refresh_events(busy, T)
+
+
+def test_refresh_events_property_sweep():
+    rng = np.random.default_rng(13)
+    for _ in range(50):
+        busy = float(rng.uniform(0.0, 5e7))
+        got = int(pim.refresh_events(jnp.float32(busy)))
+        assert got == _ref_refresh_events(busy, T), busy
+
+
+def test_old_single_recount_undercounts_on_long_streams():
+    """The regression this fixes: one re-count loses events once the
+    accumulated tRFC stalls cross more than one extra tREFI boundary."""
+    busy = np.float32(50e6)                    # 50 ms
+    n0 = int(np.floor(busy / np.float32(T.tREFI)))
+    old = int(np.floor((busy + np.float32(n0) * np.float32(T.tRFC))
+                       / np.float32(T.tREFI)))
+    new = int(pim.refresh_events(jnp.float32(busy)))
+    assert new > old                           # the cascade matters
+    assert new == _ref_refresh_events(float(busy), T)
+
+
+def test_apply_refresh_long_meter_incremental_consistency():
+    """Applying refresh to one 20ms meter == applying it across two 10ms
+    installments (every event charged exactly once, fixed point included)."""
+    half = 10e6
+    m = dataclasses.replace(pim.CostMeter.zeros(),
+                            time_ns=jnp.float32(2 * half))
+    once = pim.apply_refresh(m)
+
+    m2 = dataclasses.replace(pim.CostMeter.zeros(),
+                             time_ns=jnp.float32(half))
+    first = pim.apply_refresh(m2)
+    stepped = dataclasses.replace(
+        first, time_ns=first.time_ns + jnp.float32(half))
+    twice = pim.apply_refresh(stepped)
+    assert int(once.n_refresh) == int(twice.n_refresh)
+    assert float(once.time_ns) == pytest.approx(float(twice.time_ns),
+                                                rel=1e-6)
+    assert float(once.e_refresh) == pytest.approx(float(twice.e_refresh),
+                                                  rel=1e-6)

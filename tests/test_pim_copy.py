@@ -136,6 +136,57 @@ def test_cross_bank_copy_and_next_step_visibility():
     assert np.array_equal(np.asarray(r2.reads[2][0]), data)
 
 
+def test_inter_bank_copy_charges_edge_hops():
+    """Bugfix regression: an inter-bank COPY used to charge hops = 0
+    regardless of the subarrays involved, so S-1 → S-1 cost the same as
+    edge-to-edge. The row must ride RBM links to the source bank's edge
+    (subarray 0) and from the destination's edge inward: hand-computed,
+    src sub 2 → dst sub 1 is 3 hops on top of the internal-bus transfer."""
+    rng = np.random.default_rng(20)
+    data = _rand_row(rng)
+    b = pim.ProgramBuilder(ROWS, WORDS)
+    b.write_row(0, data)
+    b.copy_row(0, 5, dst_bank=1, dst_sub=1)
+    dev = _device(2, subarrays=3)
+    # carrier slot = (bank 0, sub 2): 2 hops to the edge + 1 hop inward
+    res = pim.schedule(dev, [[None, None, b.build()], [None, None, None]])
+    assert np.array_equal(np.asarray(res.state.slot(1, 1).bits[5]), data)
+    t = pim.DEFAULT_TIMING
+    expect_dt = t.t_aap + 3 * t.t_rbm + t.t_copy_bank
+    assert res.copy_ns == pytest.approx(expect_dt)
+    assert res.copy_total_ns == pytest.approx(expect_dt)
+    m_src = res.state.slot(0, 2).meter
+    # meter: one HOSTW burst + the copy (2 ACT, 1 PRE, 1 AAP)
+    assert int(m_src.n_aap) == 1
+    assert int(m_src.n_act) == 1 + 2 and int(m_src.n_pre) == 1 + 1
+    e_copy = 2 * t.e_act + 3 * t.e_rbm + t.e_copy_bank
+    assert float(m_src.e_act) == pytest.approx(t.e_act + e_copy)
+    burst_dt = pim.burst_time_ns(WORDS * 4, t)
+    assert float(m_src.time_ns) == pytest.approx(burst_dt + expect_dt)
+
+
+def test_edge_to_edge_inter_bank_copy_still_bus_only():
+    """S-1 → S-1 vs 0 → 0 inter-bank copies must now differ by exactly
+    2·(S-1) RBM hops."""
+    rng = np.random.default_rng(21)
+    data = _rand_row(rng)
+    t = pim.DEFAULT_TIMING
+    walls = []
+    for sub in (0, 2):
+        b = pim.ProgramBuilder(ROWS, WORDS)
+        b.write_row(0, data)
+        b.copy_row(0, 5, dst_bank=1, dst_sub=sub)
+        dev = _device(2, subarrays=3)
+        progs = [[None, None, None], [None, None, None]]
+        progs[0][sub] = b.build()
+        res = pim.schedule(dev, progs)
+        assert np.array_equal(np.asarray(res.state.slot(1, sub).bits[5]),
+                              data)
+        walls.append(res.copy_ns)
+    assert walls[0] == pytest.approx(t.t_aap + t.t_copy_bank)
+    assert walls[1] - walls[0] == pytest.approx(4 * t.t_rbm)
+
+
 def test_copy_drains_after_compute_and_in_stream_order():
     """A COPY reads its source row's post-compute value, and later copies
     observe earlier ones (chained gather within one step)."""

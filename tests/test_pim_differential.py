@@ -12,6 +12,13 @@ field (the compiled fold replays the eager path's IEEE additions, so in
 practice the meters are equal to the last ulp too). This is the safety net
 that keeps IR → compile → exec → device → schedule refactors honest.
 
+The scheduled leg also runs on a 2-channel device (channel layout must not
+touch per-slot state), a refresh strategy covers ``refresh=True`` end to
+end, and a multi-step invariant suite checks the channel-aware wall clock:
+identical bits/reads/energy across 1-/2-channel layouts and sync/async
+host scheduling, wall(2ch) <= wall(1ch) for any placement (== when one
+channel holds all the work), and async wall <= sync wall per step.
+
 Hypothesis is optional (conftest registers the profiles); without it a
 deterministic seed sweep runs the same generator. CI runs this file a
 second time under the ``differential`` profile (200 examples, fixed seed).
@@ -93,10 +100,17 @@ def _assert_agree(prog, refresh=False):
     dev = pim.make_device(pim.DeviceConfig(
         channels=1, ranks=1, banks_per_rank=1, num_rows=ROWS, words=WORDS))
     res_s = pim.schedule(dev, [prog], refresh=refresh)
+    # multi-channel device: the program on bank 1 of a 2ch x 1rank x 1bank
+    # config — per-slot state/meters must not depend on the channel layout
+    dev_mc = pim.make_device(pim.DeviceConfig(
+        channels=2, ranks=1, banks_per_rank=1, num_rows=ROWS, words=WORDS))
+    res_mc = pim.schedule(dev_mc, [None, prog], refresh=refresh)
 
     for name, state, reads in (("compiled", res_c.state, res_c.reads),
                                ("scheduled", res_s.state.bank(0),
-                                res_s.reads[0])):
+                                res_s.reads[0]),
+                               ("multi-channel", res_mc.state.bank(1),
+                                res_mc.reads[1])):
         for f in ("bits", "mig_top", "mig_bot", "dcc"):
             assert np.array_equal(np.asarray(getattr(s_e, f)),
                                   np.asarray(getattr(state, f))), \
@@ -115,15 +129,94 @@ def _assert_agree(prog, refresh=False):
                 err_msg=f"{name}: meter.{f}")
 
 
+def _assert_channel_and_async_invariants(seed: int, n_steps: int,
+                                         refresh=False):
+    """Wall-clock invariants of the channel-aware model over random
+    multi-step placements on a 4-bank device:
+
+      * identical bits/reads/energy across 1-channel and 2-channel layouts
+        and across sync/async host scheduling;
+      * wall(2ch) <= wall(1ch) for ANY placement, == when all the work sits
+        on one channel;
+      * async wall <= sync wall per step.
+    """
+    rng = np.random.default_rng(seed)
+    cfg1 = pim.DeviceConfig(channels=1, ranks=1, banks_per_rank=4,
+                            num_rows=ROWS, words=WORDS)
+    cfg2 = pim.DeviceConfig(channels=2, ranks=1, banks_per_rank=2,
+                            num_rows=ROWS, words=WORDS)
+    steps = []
+    for _ in range(n_steps):
+        steps.append([
+            _build_program(rng, int(rng.integers(1, 10)))
+            if rng.random() < 0.75 else None for _ in range(4)])
+    one_channel_only = all(p is None for s in steps for p in s[2:])
+
+    def run(cfg, async_host):
+        dev = pim.make_device(cfg)
+        walls, energies, reads, overlaps = [], [], [], 0.0
+        for progs in steps:
+            r = pim.schedule(dev, progs, refresh=refresh,
+                             async_host=async_host)
+            dev = r.state
+            walls.append(float(r.wall_ns))
+            energies.append(float(r.energy_nj))
+            reads.append(r.reads)
+            overlaps += r.host_overlap_ns
+        return dev, walls, energies, reads, overlaps
+
+    d1, w1, e1, r1, _ = run(cfg1, False)
+    d2, w2, e2, r2, _ = run(cfg2, False)
+    da, wa, ea, ra, _ = run(cfg1, True)
+    assert np.array_equal(np.asarray(d1.banks.bits),
+                          np.asarray(d2.banks.bits))
+    assert np.array_equal(np.asarray(d1.banks.bits),
+                          np.asarray(da.banks.bits))
+    for a, b, c in zip(e1, e2, ea):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+        np.testing.assert_allclose(a, c, rtol=1e-6)
+    for sa, sb, sc in zip(r1, r2, ra):
+        for ka, kb, kc in zip(sa, sb, sc):
+            for x, y, z in zip(ka, kb, kc):
+                assert np.array_equal(np.asarray(x), np.asarray(y))
+                assert np.array_equal(np.asarray(x), np.asarray(z))
+    for k, (a, b) in enumerate(zip(w1, w2)):
+        assert b <= a + 1e-3, (seed, k)
+        if one_channel_only:
+            np.testing.assert_allclose(b, a, rtol=1e-6)
+    for k, (s, a) in enumerate(zip(w1, wa)):
+        assert a <= s + 1e-3, (seed, k)
+
+
 if HAVE_HYPOTHESIS:
     @given(seed=st.integers(0, 2**32 - 1), n_ops=st.integers(1, 24))
     def test_differential_eager_compiled_scheduled(seed, n_ops):
         _assert_agree(_build_program(np.random.default_rng(seed), n_ops))
+
+    @given(seed=st.integers(0, 2**32 - 1), n_ops=st.integers(1, 24),
+           refresh=st.booleans())
+    def test_differential_refresh_modes(seed, n_ops, refresh):
+        _assert_agree(_build_program(np.random.default_rng(seed), n_ops),
+                      refresh=refresh)
+
+    @given(seed=st.integers(0, 2**32 - 1), n_steps=st.integers(1, 3))
+    def test_differential_channel_async_invariants(seed, n_steps):
+        _assert_channel_and_async_invariants(seed, n_steps)
 else:
     @pytest.mark.parametrize("seed", range(25))
     def test_differential_eager_compiled_scheduled(seed):
         rng = np.random.default_rng(seed)
         _assert_agree(_build_program(rng, int(rng.integers(1, 25))))
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_differential_refresh_modes(seed):
+        rng = np.random.default_rng(1000 + seed)
+        _assert_agree(_build_program(rng, int(rng.integers(1, 25))),
+                      refresh=bool(seed % 2))
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_differential_channel_async_invariants(seed):
+        _assert_channel_and_async_invariants(seed, 1 + seed % 3)
 
 
 @pytest.mark.parametrize("seed", range(3))

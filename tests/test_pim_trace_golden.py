@@ -105,10 +105,14 @@ def test_golden_v3_replays_copies_through_scheduler():
     # sub 1 of bank 0: FILL + AAP ran in-slot
     assert np.array_equal(np.asarray(st.slot(0, 1).bits[3]),
                           np.full(4, 0x0F0F0F0F, np.uint32))
-    # one inter-subarray hop + one inter-bank transfer drained
+    # one inter-subarray hop + one inter-bank transfer drained; they use
+    # disjoint resources (bank-0 RBM link vs the internal bus), so the
+    # drain makespan is the slower of the two while the total sums both
     t = pim.DEFAULT_TIMING
-    assert res.copy_ns == pytest.approx(
+    assert res.copy_ns == pytest.approx(t.t_aap + t.t_copy_bank)
+    assert res.copy_total_ns == pytest.approx(
         2 * t.t_aap + t.t_rbm + t.t_copy_bank)
+    assert res.copy_queue_ns == 0.0
 
 
 def test_golden_v1_rejects_when_corrupted():
