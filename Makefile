@@ -10,12 +10,14 @@ test:
 	$(PYTHON) -m pytest -x -q
 
 # Kernel micro-bench in interpret mode + eager-vs-compiled executor
-# comparison + the channel-overlap roofline report; writes the
-# bench-trajectory JSONs next to the repo.
+# comparison + the channel-overlap roofline report + the host-side
+# scheduler/orchestration bench; writes the bench-trajectory JSONs next
+# to the repo.
 bench-smoke:
 	$(PYTHON) -m benchmarks.kernel_bench kernel_bench.json
 	$(PYTHON) -m benchmarks.trace_replay
 	$(PYTHON) -m benchmarks.roofline_report roofline_channels.json
+	$(PYTHON) -m benchmarks.scheduler_bench scheduler_bench.json
 
 # Syntax/bytecode check everywhere; upgrade to pyflakes when present.
 lint:

@@ -1,0 +1,164 @@
+"""Host-side scheduler/orchestration benchmark (``scheduler_bench.json``).
+
+Measures the control-plane costs the columnar-IR + single-dispatch
+scheduler rework targets (ISSUE 5), starting the perf trajectory for the
+host orchestration path:
+
+  * ``cost_pass_first_us``   — first call of the vectorized columnar cost
+    pass on the Table 2/3 N=1000 shift stream, vs the per-op Python loop +
+    jitted-scan fold it replaced (``cost_pass_loop_first_us``).
+  * ``steady_steps_per_s``   — steady-state throughput of a recurring
+    32-bank schedule step, per-step Python loop vs ``schedule_pipeline``'s
+    single ``lax.scan`` dispatch.
+  * ``dispatches_per_step``  — XLA dispatches per steady-state step
+    (acceptance bar: <= 1 for the per-step path, << 1 for the pipeline).
+  * ``first_compile_ms``     — one-time cost of the first schedule call on
+    a fresh layout (plan build + trace + XLA compile).
+
+Numbers are host-orchestration wall time on whatever machine runs the
+bench (CPU in CI) — the point is the *ratio* trajectory, not the absolute
+microseconds.
+"""
+import importlib
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pim
+from repro.core.pim import compile as pim_compile
+
+pim_schedule = importlib.import_module("repro.core.pim.schedule")
+
+TABLE23_SHIFTS = 1000
+PIPELINE_STEPS = 100
+BANKS = 32
+ROWS, WORDS = 64, 64
+
+
+def bench_cost_pass(report=print):
+    """Columnar gather + numpy fold vs per-op loop + jitted scan fold."""
+    prog = pim.shift_workload_program(TABLE23_SHIFTS, ROWS, WORDS)
+
+    # Reference (pre-columnar) path FIRST, before anything warms the
+    # _fold_tables jit cache: per-op Python table build + compiled fold.
+    t0 = time.perf_counter()
+    f_tab, i_tab = pim.cost_tables_reference(prog)
+    f0 = jnp.zeros(6, jnp.float32)
+    i0 = jnp.zeros(6, jnp.int32)
+    ff, fi = pim_compile._fold_tables(jnp.asarray(f_tab), jnp.asarray(i_tab),
+                                      f0, i0)
+    jax.block_until_ready(ff)
+    loop_first_us = (time.perf_counter() - t0) * 1e6
+
+    t0 = time.perf_counter()
+    meter = pim.cost_pass(prog)
+    cost_first_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    meter = pim.cost_pass(prog)
+    cost_warm_us = (time.perf_counter() - t0) * 1e6
+
+    exact = float(meter.time_ns) == float(ff[0])
+    report(f"cost pass (loop+scan, first) : {loop_first_us:12.1f} us")
+    report(f"cost pass (columnar, first)  : {cost_first_us:12.1f} us  "
+           f"({loop_first_us / cost_first_us:.1f}x, bit-exact={exact})")
+    report(f"cost pass (columnar, warm)   : {cost_warm_us:12.1f} us")
+    return {
+        "cost_pass_loop_first_us": loop_first_us,
+        "cost_pass_first_us": cost_first_us,
+        "cost_pass_warm_us": cost_warm_us,
+        "cost_pass_first_speedup": loop_first_us / cost_first_us,
+        "cost_pass_bit_exact": exact,
+    }
+
+
+def _step_programs(rng):
+    """One recurring 32-bank step — the paper's streaming shape: load a
+    fresh row into each bank, run the 40-shift chain in-DRAM, read the
+    result back. Same stream everywhere, per-bank payload data."""
+    b = pim.ProgramBuilder(ROWS, WORDS)
+    b.issue()
+    b.write_row(0, rng.integers(0, 2 ** 32, (WORDS,), dtype=np.uint32))
+    b.shift_k(0, 1, 40)
+    b.read_row(1)
+    base = b.build()
+    return [base] + [
+        base.with_payloads(
+            [rng.integers(0, 2 ** 32, (WORDS,), dtype=np.uint32)])
+        for _ in range(BANKS - 1)]
+
+
+def bench_pipeline(report=print, reps=3):
+    rng = np.random.default_rng(0)
+    cfg = pim.paper_device(BANKS, num_rows=ROWS, words=WORDS)
+    progs = _step_programs(rng)
+
+    # First schedule call on a fresh layout: plan + trace + XLA compile.
+    dev = pim.make_device(cfg)
+    t0 = time.perf_counter()
+    res = pim.schedule(dev, progs)
+    jax.block_until_ready(res.state.banks.bits)
+    first_compile_ms = (time.perf_counter() - t0) * 1e3
+
+    # Steady state (best of `reps` — host timing is noisy in CI),
+    # per-step Python loop vs one lax.scan dispatch.
+    stats = pim_schedule.SCHED_STATS
+    dev = res.state
+    pr = pim.schedule_pipeline(dev, progs, n_steps=PIPELINE_STEPS)
+    jax.block_until_ready(pr.state.banks.bits)
+    loop_s, pipe_s = float("inf"), float("inf")
+    for _ in range(reps):
+        d0 = stats["dispatches"]
+        t0 = time.perf_counter()
+        for _ in range(PIPELINE_STEPS):
+            res = pim.schedule(dev, progs)
+            dev = res.state
+        jax.block_until_ready(dev.banks.bits)
+        loop_s = min(loop_s, time.perf_counter() - t0)
+        loop_dispatch = (stats["dispatches"] - d0) / PIPELINE_STEPS
+
+        d0 = stats["dispatches"]
+        t0 = time.perf_counter()
+        pr = pim.schedule_pipeline(pr.state, progs, n_steps=PIPELINE_STEPS)
+        jax.block_until_ready(pr.state.banks.bits)
+        pipe_s = min(pipe_s, time.perf_counter() - t0)
+        pipe_dispatch = (stats["dispatches"] - d0) / PIPELINE_STEPS
+
+    loop_sps = PIPELINE_STEPS / loop_s
+    pipe_sps = PIPELINE_STEPS / pipe_s
+    report(f"first schedule (fresh layout): {first_compile_ms:10.1f} ms")
+    report(f"steady loop ({BANKS} banks)       : {loop_sps:10.1f} steps/s  "
+           f"({loop_dispatch:.2f} dispatches/step)")
+    report(f"steady pipeline (lax.scan)   : {pipe_sps:10.1f} steps/s  "
+           f"({pipe_dispatch:.2f} dispatches/step, "
+           f"{pipe_sps / loop_sps:.1f}x)")
+    return {
+        "workload": f"recurring_{BANKS}bank_step_x{PIPELINE_STEPS}",
+        "first_compile_ms": first_compile_ms,
+        "steady_loop_steps_per_s": loop_sps,
+        "steady_pipeline_steps_per_s": pipe_sps,
+        "pipeline_speedup": pipe_sps / loop_sps,
+        "dispatches_per_step_loop": loop_dispatch,
+        "dispatches_per_step_pipeline": pipe_dispatch,
+    }
+
+
+def run(report=print, json_path=None):
+    out = {"n_shifts": TABLE23_SHIFTS, "pipeline_steps": PIPELINE_STEPS}
+    out.update(bench_cost_pass(report))
+    out.update(bench_pipeline(report))
+    blob = json.dumps(out, indent=2, sort_keys=True)
+    if json_path:
+        with open(json_path, "w") as f:
+            f.write(blob + "\n")
+        report(f"wrote {json_path}")
+    else:
+        report(blob)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(json_path=sys.argv[1] if len(sys.argv) > 1 else None)

@@ -36,7 +36,7 @@ from ..pim import isa
 from ..pim import exec as pim_exec
 from ..pim.device import DeviceConfig, make_device
 from ..pim.ir import PimProgram, ProgramBuilder
-from ..pim.schedule import schedule
+from ..pim.schedule import compiled_for, schedule, schedule_pipeline
 from ..pim.state import SubarrayState, make_subarray
 from ..pim.timing import DDR3Timing, DEFAULT_TIMING
 from . import layout
@@ -76,6 +76,7 @@ class PimVM:
             self.bank_lanes = (self.bank_words * 32) // width
             self._builder = ProgramBuilder(num_rows, self.bank_words)
             self._bank_payloads: list[list[np.ndarray]] = []
+            self._read_result = None
             self._device = make_device(DeviceConfig(
                 channels=1, ranks=1, banks_per_rank=n_banks,
                 num_rows=num_rows, words=self.bank_words, timing=cfg))
@@ -96,7 +97,9 @@ class PimVM:
         """Record one HOSTW whose payload differs per bank: the recorded op
         (and slot index) is shared, the data is the bank's word slice."""
         w = self.bank_words
-        slices = [np.asarray(full_row[b * w:(b + 1) * w], dtype=np.uint32)
+        # copies, not views: recorded payloads must never alias caller data
+        slices = [np.array(full_row[b * w:(b + 1) * w], dtype=np.uint32,
+                           copy=True)
                   for b in range(self.n_banks)]
         self._builder.write_row(reg, slices[0])
         self._bank_payloads.append(slices)
@@ -113,16 +116,16 @@ class PimVM:
             return
         prog = self._builder.build()
         programs = [
-            PimProgram(ops=prog.ops, num_rows=prog.num_rows,
-                       words=prog.words,
-                       payloads=tuple(rows[b] for rows in
-                                      self._bank_payloads))
+            prog.with_payloads(rows[b] for rows in self._bank_payloads)
             for b in range(self.n_banks)]
         res = schedule(self._device, programs, async_host=self.async_host)
         self._device = res.state
-        self._reads = res.reads            # per bank, slot order
-        self._wall_ns += float(res.wall_ns)
-        self._host_overlap_ns += float(res.host_overlap_ns)
+        self._read_result = res            # reads unbatch lazily on access
+        # lazy accumulation: no blocking device sync per flush — the
+        # accounting properties convert on access
+        self._wall_ns = self._wall_ns + res.wall_ns
+        self._host_overlap_ns = (self._host_overlap_ns
+                                 + res.host_overlap_ns_lazy)
         self._builder = ProgramBuilder(self._num_rows, self.bank_words)
         self._bank_payloads = []
 
@@ -141,6 +144,103 @@ class PimVM:
         prog = self._builder.build()
         self._builder = ProgramBuilder(self._num_rows, self.words)
         return prog
+
+    def run_pipeline(self, step, xs) -> list:
+        """Execute ``step`` once per element of ``xs`` as ONE scanned
+        dispatch (steady-state: one XLA scan iteration per step, no Python
+        round-trip).
+
+        ``step(vm, x)`` records one pipeline step through the normal VM
+        vocabulary (``load``/``xor``/``shift_elem``/...) and returns the
+        register (or sequence of registers) to read back; it must record
+        the SAME command stream for every ``x`` (guaranteed when it only
+        depends on shapes — HOSTW payload *data* may differ freely) and
+        must not call ``read``/accounting mid-step (those flush). The
+        allocator and mask cache are rewound to their pre-pipeline state
+        before EVERY recording (that is what makes the streams recur), so
+        a mask created inside ``step`` is host-written in every step —
+        pre-create hot masks with ``vm.mask(...)`` before the pipeline to
+        charge them once. Single-
+        bank VMs run the K steps under ``exec.make_pipeline_runner``'s
+        ``lax.scan``; lane-sharded VMs ride ``schedule_pipeline`` on the
+        device (honoring ``async_host``). Returns one entry per step: the
+        unpacked value of each returned register (a list when ``step``
+        returns a sequence).
+        """
+        assert not self.eager, "run_pipeline needs the recorded-IR path"
+        xs = list(xs)
+        assert xs, "need at least one pipeline step"
+        self._flush()                   # pending ops run before the pipeline
+        free0, masks0 = list(self._free), dict(self._mask_rows)
+        progs, bank_payloads = [], []
+        read_slots, single = None, False
+        for x in xs:
+            self._free, self._mask_rows = list(free0), dict(masks0)
+            out = step(self, x)
+            regs = list(out) if isinstance(out, (list, tuple)) else [out]
+            slots = [self._builder.read_row(r) for r in regs]
+            progs.append(self._builder.build())
+            if self.n_banks == 1:
+                self._builder = ProgramBuilder(self._num_rows, self.words)
+            else:
+                bank_payloads.append(self._bank_payloads)
+                self._bank_payloads = []
+                self._builder = ProgramBuilder(self._num_rows,
+                                               self.bank_words)
+            if read_slots is None:
+                read_slots = slots
+                single = not isinstance(out, (list, tuple))
+        # Registers allocated inside `step` are transient: their values come
+        # back as host reads, so the allocator (and mask cache) return to
+        # the pre-pipeline state — repeated run_pipeline calls record the
+        # SAME rows and stay warm in every cache.
+        self._free, self._mask_rows = list(free0), dict(masks0)
+        key0 = (progs[0].digest, len(progs[0].payloads))
+        for k, p in enumerate(progs[1:], 1):
+            if (p.digest, len(p.payloads)) != key0:
+                raise ValueError(
+                    f"pipeline step {k} recorded a different command "
+                    "stream than step 0; run_pipeline replays ONE "
+                    "recurring step, so the step function must be "
+                    "shape-deterministic")
+        K = len(progs)
+        if self.n_banks == 1:
+            compiled = compiled_for(progs[0], self.cfg)
+            pipe = pim_exec.make_pipeline_runner(compiled, self.cfg)
+            if progs[0].payloads:
+                payload_steps = jnp.asarray(np.stack(
+                    [np.stack(p.payloads) for p in progs]
+                ).astype(np.uint32))
+            else:
+                payload_steps = jnp.zeros((K, 0, self.words), jnp.uint32)
+            self.state, reads_steps = pipe(self.state, payload_steps)
+
+            def row(k, slot):
+                return reads_steps[slot][k]
+        else:
+            steps = [[prog.with_payloads(rows[b] for rows in pays)
+                      for b in range(self.n_banks)]
+                     for prog, pays in zip(progs, bank_payloads)]
+            res = schedule_pipeline(self._device, steps,
+                                    async_host=self.async_host)
+            self._device = res.state
+            self._wall_ns = self._wall_ns + jnp.sum(res.wall_ns)
+            self._host_overlap_ns = (
+                self._host_overlap_ns
+                + jnp.sum(jnp.asarray(res.host_overlap_ns_lazy)))
+            per_step = res.reads          # [k][bank] -> per-read rows
+
+            def row(k, slot):
+                return np.concatenate(
+                    [np.asarray(per_step[k][b][slot])
+                     for b in range(self.n_banks)])
+        out = []
+        for k in range(K):
+            vals = [layout.unpack_elements(np.asarray(row(k, s)),
+                                           self.width, self.lanes)
+                    for s in read_slots]
+            out.append(vals[0] if single else vals)
+        return out
 
     # -- register management -------------------------------------------------
     def alloc(self) -> int:
@@ -177,13 +277,17 @@ class PimVM:
             return [self.read(r) for r in regs]
         slots = [self._builder.read_row(r) for r in regs]
         self._flush()
+        if not slots:
+            return []           # pending ops flushed; nothing to unbatch
+        reads = (self._reads if self.n_banks == 1
+                 else self._read_result.reads)
         out = []
         for slot in slots:
             if self.n_banks == 1:
-                row = self._reads[slot]
+                row = reads[slot]
             else:
                 row = np.concatenate(
-                    [np.asarray(self._reads[b][slot])
+                    [np.asarray(reads[b][slot])
                      for b in range(self.n_banks)])
             out.append(layout.unpack_elements(row, self.width, self.lanes))
         return out
@@ -288,7 +392,7 @@ class PimVM:
         self._flush()
         if self.n_banks == 1:
             return float(self.state.meter.time_ns)
-        return self._wall_ns
+        return float(self._wall_ns)
 
     @property
     def energy_nj(self) -> float:
@@ -302,7 +406,7 @@ class PimVM:
         """Host-transfer time hidden under compute by the async engine
         (sharded VMs with ``async_host=True``), accumulated across flushes."""
         self._flush()
-        return 0.0 if self.n_banks == 1 else self._host_overlap_ns
+        return 0.0 if self.n_banks == 1 else float(self._host_overlap_ns)
 
     @property
     def setup_energy_nj(self) -> float:

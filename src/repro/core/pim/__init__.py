@@ -16,14 +16,16 @@ from .ir import (COPY_SELF, PimOp, PimProgram, ProgramBuilder,
                  decode_payload, from_trace_banks, from_trace_device, record,
                  rle_encode_payload, to_trace_banks, to_trace_device)
 from .compile import (CompiledProgram, compile_program, cost_pass,
-                      cost_summary, dead_copy_elimination, fuse)
-from .exec import ExecResult, execute, make_runner
+                      cost_summary, cost_tables, cost_tables_reference,
+                      dead_copy_elimination, fuse)
+from .exec import ExecResult, execute, make_pipeline_runner, make_runner
 from .device import (DeviceConfig, DeviceState, bus_time_ns,
-                     channel_bus_model, device_wall_ns, host_bus_ns,
-                     issue_bus_ns, make_device, paper_device)
-from .schedule import (CopyDrainStats, ScheduleResult, gather_rows, schedule,
-                       shard_lanes, shard_rows, stream_key,
-                       xor_reduce_program)
+                     channel_bus_model, channel_occupancy, device_wall_ns,
+                     host_bus_ns, issue_bus_ns, make_device, paper_device)
+from .schedule import (CopyDrainStats, PipelineResult, ScheduleResult,
+                       compiled_for, gather_rows, schedule,
+                       schedule_pipeline, shard_lanes, shard_rows,
+                       stream_key, xor_reduce_program)
 from .variation import (PAPER_TABLE4, TECH22, Tech22nm, shift_failure_rate)
 from .area import AreaModel, PAPER_TABLE5, mim_capacitor_plate_side_um
 
@@ -43,13 +45,14 @@ __all__ = [
     "from_trace_banks", "from_trace_device", "to_trace_banks",
     "to_trace_device",
     "CompiledProgram", "compile_program", "cost_pass", "cost_summary",
-    "dead_copy_elimination", "fuse",
-    "ExecResult", "execute", "make_runner",
+    "cost_tables", "cost_tables_reference", "dead_copy_elimination", "fuse",
+    "ExecResult", "execute", "make_pipeline_runner", "make_runner",
     "DeviceConfig", "DeviceState", "bus_time_ns", "channel_bus_model",
-    "device_wall_ns", "host_bus_ns", "issue_bus_ns",
+    "channel_occupancy", "device_wall_ns", "host_bus_ns", "issue_bus_ns",
     "make_device", "paper_device",
-    "CopyDrainStats", "ScheduleResult", "gather_rows", "schedule",
-    "shard_lanes", "shard_rows", "stream_key", "xor_reduce_program",
+    "CopyDrainStats", "PipelineResult", "ScheduleResult", "compiled_for",
+    "gather_rows", "schedule", "schedule_pipeline", "shard_lanes",
+    "shard_rows", "stream_key", "xor_reduce_program",
     "PAPER_TABLE4", "TECH22", "Tech22nm", "shift_failure_rate",
     "AreaModel", "PAPER_TABLE5", "mim_capacitor_plate_side_um",
 ]

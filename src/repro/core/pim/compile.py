@@ -96,10 +96,13 @@ def _event_rows(op: ir.PimOp, words: int, cfg: DDR3Timing):
         raise ValueError(op.op)
 
 
-def cost_tables(program: ir.PimProgram,
-                cfg: DDR3Timing = DEFAULT_TIMING):
-    """(m, 6) float32 + (m, 6) int32 increment tables, one row per charge
-    event in program order."""
+def cost_tables_reference(program: ir.PimProgram,
+                          cfg: DDR3Timing = DEFAULT_TIMING):
+    """Per-op Python-loop table builder (the pre-columnar implementation).
+
+    Kept as the bit-exactness oracle for the vectorized :func:`cost_tables`
+    (differential tests compare the two row-for-row) and as the baseline
+    the scheduler benchmark measures the columnar gather against."""
     frows, irows = [], []
     for op in program.ops:
         for f, i in _event_rows(op, program.words, cfg):
@@ -110,30 +113,174 @@ def cost_tables(program: ir.PimProgram,
     return (np.asarray(frows, np.float32), np.asarray(irows, np.int32))
 
 
+# Most events any single op expands to (SHIFT = 4 AAPs).
+_MAX_EVENTS = 4
+
+# Representative op per opcode — operand-independent cost templates. COPY
+# uses the local (self-slot) form; cross-slot COPYs are refused by
+# cost_tables just as the per-op path refused them.
+_TEMPLATE_OPS = {
+    ir.OP_ISSUE: ir.PimOp(ir.OP_ISSUE),
+    ir.OP_ROWCLONE: ir.PimOp(ir.OP_ROWCLONE),
+    ir.OP_DRA: ir.PimOp(ir.OP_DRA),
+    ir.OP_TRA: ir.PimOp(ir.OP_TRA),
+    ir.OP_NOT2DCC: ir.PimOp(ir.OP_NOT2DCC),
+    ir.OP_DCC2: ir.PimOp(ir.OP_DCC2),
+    ir.OP_SHIFT: ir.PimOp(ir.OP_SHIFT, delta=1),
+    ir.OP_WRITE: ir.PimOp(ir.OP_WRITE),
+    ir.OP_READ: ir.PimOp(ir.OP_READ),
+    ir.OP_FILL: ir.PimOp(ir.OP_FILL),
+    ir.OP_COPY: ir.PimOp(ir.OP_COPY, delta=ir.COPY_SELF, c=ir.COPY_SELF),
+}
+
+
+@functools.lru_cache(maxsize=64)
+def _opcode_templates(words: int, cfg: DDR3Timing):
+    """Per-opcode increment templates: ``(n_codes, _MAX_EVENTS, 6)`` float32
+    and int32 event rows plus the per-opcode event count, built once per
+    (words, timing) through the same ``_event_rows`` generator — so the
+    vectorized gather reproduces the per-op loop float32-for-float32."""
+    n_codes = len(ir.OPCODES)
+    f_t = np.zeros((n_codes, _MAX_EVENTS, 6), np.float32)
+    i_t = np.zeros((n_codes, _MAX_EVENTS, 6), np.int32)
+    counts = np.zeros(n_codes, np.int64)
+    for name, op in _TEMPLATE_OPS.items():
+        code = ir.OP_CODE[name]
+        for e, (f, i) in enumerate(_event_rows(op, words, cfg)):
+            f_t[code, e] = f
+            i_t[code, e] = i
+            counts[code] = e + 1
+    f_t.setflags(write=False)
+    i_t.setflags(write=False)
+    counts.setflags(write=False)
+    return f_t, i_t, counts
+
+
+def cost_tables(program: ir.PimProgram,
+                cfg: DDR3Timing = DEFAULT_TIMING):
+    """(m, 6) float32 + (m, 6) int32 increment tables, one row per charge
+    event in program order.
+
+    Vectorized over the program's cached columnar encoding: one numpy
+    gather from the per-opcode templates instead of a per-op Python loop.
+    Bit-exact against :func:`cost_tables_reference` (same rows, same order,
+    same float32 values)."""
+    cols = program.columns
+    codes = cols.code
+    if codes.size == 0:
+        return (np.zeros((0, 6), np.float32), np.zeros((0, 6), np.int32))
+    is_copy = codes == ir.OP_CODE[ir.OP_COPY]
+    if is_copy.any():
+        local = (((cols.delta == ir.COPY_SELF) & (cols.c == ir.COPY_SELF))
+                 | ((cols.delta == 0) & (cols.c == 0)))
+        bad = np.flatnonzero(is_copy & ~local)
+        if bad.size:
+            i = int(bad[0])
+            raise ValueError(
+                f"cross-subarray COPY to ({int(cols.delta[i])}, "
+                f"{int(cols.c[i])}) cannot be compiled for one subarray — "
+                "route it through the device scheduler (schedule.py), "
+                "which strips and applies it")
+    f_t, i_t, counts = _opcode_templates(program.words, cfg)
+    ev = counts[codes]
+    total = int(ev.sum())
+    if total == 0:
+        return (np.zeros((0, 6), np.float32), np.zeros((0, 6), np.int32))
+    rep = np.repeat(codes, ev)
+    within = np.arange(total) - np.repeat(np.cumsum(ev) - ev, ev)
+    return f_t[rep, within], i_t[rep, within]
+
+
+# The in-jit fold runs as a lax.scan over BLOCKS of this many event rows,
+# each block's additions unrolled in the loop body. Same additions in the
+# same order as a row-at-a-time scan (bit-exact — trailing blocks are
+# padded with +0.0 rows, an IEEE identity on these non-negative meters),
+# but ~64x fewer XLA loop iterations: the per-step cost of a compiled
+# runner no longer scales with one loop trip per charge event.
+#
+# Each float add sits behind jax.lax.optimization_barrier: XLA's CPU
+# fast-math would otherwise reassociate the unrolled chain into SIMD
+# partial sums and drift from the eager meter by ulps. jax 0.4.x has no
+# vmap batching rule for the barrier primitive, but it is an identity
+# primitive, so the passthrough rule (the one upstream later added) is
+# registered here; without it the fold falls back to row-at-a-time blocks,
+# which need no barrier.
+_FOLD_BLOCK = 64
+
+
+def _register_barrier_batching() -> bool:
+    try:
+        from jax._src.lax.lax import optimization_barrier_p as p
+        from jax.interpreters import batching
+        if p not in batching.primitive_batchers:
+            batching.primitive_batchers[p] = (
+                lambda args, dims: (p.bind(*args), dims))
+        return True
+    except Exception:           # pragma: no cover - future-jax safety net
+        return False
+
+
+_BARRIER_OK = _register_barrier_batching()
+
+
 @functools.partial(jax.jit, static_argnames=())
 def _fold_tables(f_tab, i_tab, f0, i0):
-    def step(carry, row):
-        cf, ci = carry
-        rf, ri = row
-        return (cf + rf, ci + ri), ()
+    n = f_tab.shape[0]
+    if n == 0:
+        return f0, i0
+    block = _FOLD_BLOCK if _BARRIER_OK else 1
+    pad = (-n) % block
+    if pad:
+        f_tab = jnp.concatenate(
+            [f_tab, jnp.zeros((pad, f_tab.shape[1]), f_tab.dtype)])
+        i_tab = jnp.concatenate(
+            [i_tab, jnp.zeros((pad, i_tab.shape[1]), i_tab.dtype)])
 
-    (ff, fi), _ = jax.lax.scan(step, (f0, i0), (f_tab, i_tab))
+    def step(carry, blk):
+        cf, ci = carry
+        bf, bi = blk
+        for j in range(block):          # unrolled inside the loop body
+            cf = cf + bf[j]
+            if _BARRIER_OK:
+                cf = jax.lax.optimization_barrier(cf)
+            ci = ci + bi[j]
+        return (cf, ci), ()
+
+    (ff, fi), _ = jax.lax.scan(
+        step, (f0, i0),
+        (f_tab.reshape(-1, block, f_tab.shape[1]),
+         i_tab.reshape(-1, block, i_tab.shape[1])))
     return ff, fi
 
 
 def cost_pass(program: ir.PimProgram, cfg: DDR3Timing = DEFAULT_TIMING,
               init: CostMeter | None = None) -> CostMeter:
-    """Exact meter for the whole program in one compiled fold (accumulating
-    on top of ``init`` when given) — equals the eager path bit-for-bit."""
+    """Exact meter for the whole program in one fold (accumulating on top
+    of ``init`` when given) — equals the eager path bit-for-bit.
+
+    The fold is a strictly-sequential ``np.add.accumulate`` over the
+    columnar increment tables: the same IEEE float32 additions in the same
+    order as the eager per-command path (and as the executor's in-jit
+    ``lax.scan`` fold), with no XLA compilation on the host path at all."""
     f_tab, i_tab = cost_tables(program, cfg)
     init = CostMeter.zeros() if init is None else init
-    f0 = jnp.stack([jnp.asarray(getattr(init, k), jnp.float32)
-                    for k in _FLOAT_FIELDS])
-    i0 = jnp.stack([jnp.asarray(getattr(init, k), jnp.int32)
-                    for k in _INT_FIELDS])
-    ff, fi = _fold_tables(jnp.asarray(f_tab), jnp.asarray(i_tab), f0, i0)
-    fields = {k: ff[j] for j, k in enumerate(_FLOAT_FIELDS)}
-    fields.update({k: fi[j] for j, k in enumerate(_INT_FIELDS)})
+    f0 = np.asarray([np.float32(getattr(init, k)) for k in _FLOAT_FIELDS],
+                    np.float32)
+    i0 = np.asarray([np.int32(getattr(init, k)) for k in _INT_FIELDS],
+                    np.int32)
+    if len(f_tab):
+        ff = np.add.accumulate(
+            np.concatenate([f0[None, :], f_tab], axis=0),
+            axis=0, dtype=np.float32)[-1]
+        fi = np.add.accumulate(
+            np.concatenate([i0[None, :], i_tab], axis=0),
+            axis=0, dtype=np.int32)[-1]
+    else:
+        ff, fi = f0, i0
+    fields = {k: jnp.asarray(ff[j], jnp.float32)
+              for j, k in enumerate(_FLOAT_FIELDS)}
+    fields.update({k: jnp.asarray(fi[j], jnp.int32)
+                   for j, k in enumerate(_INT_FIELDS)})
     return CostMeter(**fields)
 
 
@@ -246,24 +393,53 @@ _SCANNABLE = (ir.OP_ROWCLONE, ir.OP_DRA, ir.OP_TRA, ir.OP_NOT2DCC,
               ir.OP_DCC2, ir.OP_SHIFT, ir.OP_COPY)
 
 
-def _match_maj(ops, i, num_rows):
-    """Recognize the 5-op ambit_maj expansion at ops[i:] when the fused
-    read-all-then-write form is alias-safe."""
-    if i + 5 > len(ops):
-        return None
+def _maj_sites(cols: ir.ProgramColumns, num_rows: int) -> np.ndarray:
+    """Boolean mask of positions ``i`` where ``ops[i:i+5]`` is the
+    ambit_maj expansion in its alias-safe fused form (the vectorized
+    5-op window match the old per-position ``_match_maj`` performed):
+    three rowclones into T0..T2, the TRA over them, and the rowclone of
+    T0 into dst — refused when a later source would have observed an
+    earlier scratch write."""
+    n = len(cols.table)
+    maj_at = np.zeros(n, bool)
+    if n < 5:
+        return maj_at
     t0, t1, t2 = (int(t) % num_rows for t in (isa.T0, isa.T1, isa.T2))
-    o0, o1, o2, o3, o4 = ops[i:i + 5]
-    if not (o0.op == ir.OP_ROWCLONE and o0.b == t0
-            and o1.op == ir.OP_ROWCLONE and o1.b == t1
-            and o2.op == ir.OP_ROWCLONE and o2.b == t2
-            and o3.op == ir.OP_TRA and (o3.a, o3.b, o3.c) == (t0, t1, t2)
-            and o4.op == ir.OP_ROWCLONE and o4.a == t0):
-        return None
-    # Fused form reads a, b, c before writing T0..T2: refuse when a later
-    # source would have observed an earlier scratch write.
-    if o1.a == t0 or o2.a in (t0, t1):
-        return None
-    return SegMaj(a=o0.a, b=o1.a, c=o2.a, dst=o4.b)
+    code, a, b, c = cols.code, cols.a, cols.b, cols.c
+    rc, tra = ir.OP_CODE[ir.OP_ROWCLONE], ir.OP_CODE[ir.OP_TRA]
+    m = ((code[:n - 4] == rc) & (b[:n - 4] == t0)
+         & (code[1:n - 3] == rc) & (b[1:n - 3] == t1)
+         & (code[2:n - 2] == rc) & (b[2:n - 2] == t2)
+         & (code[3:n - 1] == tra) & (a[3:n - 1] == t0)
+         & (b[3:n - 1] == t1) & (c[3:n - 1] == t2)
+         & (code[4:] == rc) & (a[4:] == t0)
+         # alias safety: reads of a, b, c precede the scratch writes
+         & (a[1:n - 3] != t0) & (a[2:n - 2] != t0) & (a[2:n - 2] != t1))
+    maj_at[:n - 4] = m
+    return maj_at
+
+
+def _shift_runs(cols: ir.ProgramColumns) -> tuple[np.ndarray, np.ndarray]:
+    """Columnar chain detection: ``(cont, run_end)`` where ``cont[j]`` is
+    True when the SHIFT at ``j`` continues the chain started earlier (same
+    dst, src == dst, same direction) and ``run_end[s]`` holds, for every
+    chain start ``s``, the index one past the chain's last op (-1
+    elsewhere)."""
+    n = len(cols.table)
+    code, a, b, delta = cols.code, cols.a, cols.b, cols.delta
+    is_shift = code == ir.OP_CODE[ir.OP_SHIFT]
+    cont = np.zeros(n, bool)
+    if n > 1:
+        cont[1:] = (is_shift[1:] & is_shift[:-1]
+                    & (a[1:] == b[1:]) & (b[1:] == b[:-1])
+                    & (delta[1:] == delta[:-1]))
+    run_end = np.full(n, -1, np.int64)
+    starts = np.flatnonzero(is_shift & ~cont)
+    if starts.size:
+        breaks = np.flatnonzero(~cont)
+        pos = np.searchsorted(breaks, starts, side="right")
+        run_end[starts] = np.append(breaks, n)[pos]
+    return cont, run_end
 
 
 # Shift chains shorter than this stay residual (scan) ops: a handful of
@@ -274,9 +450,24 @@ SHIFT_FUSE_MIN = 32
 
 def fuse(program: ir.PimProgram, *,
          shift_fuse_min: int = SHIFT_FUSE_MIN) -> tuple:
-    """Lower the op stream to a segment list for the executor."""
+    """Lower the op stream to a segment list for the executor.
+
+    Pattern detection (MAJ idioms, shift chains) runs vectorized on the
+    program's columnar encoding; the walk then just jumps between the
+    precomputed match sites instead of re-inspecting ``PimOp`` operands at
+    every position."""
     ops = program.ops
-    num_rows = program.num_rows
+    n = len(ops)
+    if n == 0:
+        return ()
+    cols = program.columns
+    code = cols.code
+    maj_at = _maj_sites(cols, program.num_rows)
+    cont, run_end = _shift_runs(cols)
+    shift_c = ir.OP_CODE[ir.OP_SHIFT]
+    not2dcc_c, dcc2_c = ir.OP_CODE[ir.OP_NOT2DCC], ir.OP_CODE[ir.OP_DCC2]
+    host_cs = {ir.OP_CODE[o] for o in (ir.OP_WRITE, ir.OP_READ, ir.OP_FILL)}
+    issue_c = ir.OP_CODE[ir.OP_ISSUE]
     segments: list = []
     residual: list[ir.PimOp] = []
 
@@ -286,41 +477,41 @@ def fuse(program: ir.PimProgram, *,
             residual.clear()
 
     i = 0
-    while i < len(ops):
+    while i < n:
         op = ops[i]
-        maj = _match_maj(ops, i, num_rows)
-        if maj is not None:
+        ci = code[i]
+        if maj_at[i]:
             flush_residual()
-            segments.append(maj)
+            segments.append(SegMaj(a=op.a, b=ops[i + 1].a, c=ops[i + 2].a,
+                                   dst=ops[i + 4].b))
             i += 5
             continue
-        if (op.op == ir.OP_NOT2DCC and i + 1 < len(ops)
-                and ops[i + 1].op == ir.OP_DCC2):
+        if ci == not2dcc_c and i + 1 < n and code[i + 1] == dcc2_c:
             flush_residual()
             segments.append(SegNot(src=op.a, dst=ops[i + 1].b))
             i += 2
             continue
-        if op.op == ir.OP_SHIFT:
-            j, dst, delta = i + 1, op.b, op.delta
-            while (j < len(ops) and ops[j].op == ir.OP_SHIFT
-                   and ops[j].a == dst and ops[j].b == dst
-                   and ops[j].delta == delta):
-                j += 1
+        if ci == shift_c:
+            j = int(run_end[i])
+            if j < 0:               # mid-run landing (cannot happen via the
+                j = i + 1           # walk itself): extend by continuation
+                while j < n and cont[j]:
+                    j += 1
             if j - i >= max(2, shift_fuse_min):
                 flush_residual()
-                segments.append(SegShiftRun(src=op.a, dst=dst, delta=delta,
-                                            k=j - i))
+                segments.append(SegShiftRun(src=op.a, dst=op.b,
+                                            delta=op.delta, k=j - i))
                 i = j
                 continue
             residual.extend(ops[i:j])
             i = j
             continue
-        if op.op in (ir.OP_WRITE, ir.OP_READ, ir.OP_FILL):
+        if ci in host_cs:
             flush_residual()
             segments.append(SegHost(op=op))
             i += 1
             continue
-        if op.op == ir.OP_ISSUE:
+        if ci == issue_c:
             i += 1                    # cost-only; no state effect
             continue
         assert op.op in _SCANNABLE, op.op

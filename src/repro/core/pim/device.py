@@ -113,8 +113,8 @@ def paper_device(n_banks: int, num_rows: int = NUM_ROWS,
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=["banks"],
-    meta_fields=["config", "host_credit_ns"],
+    data_fields=["banks", "host_credit_ns"],
+    meta_fields=["config"],
 )
 @dataclasses.dataclass
 class DeviceState:
@@ -126,11 +126,14 @@ class DeviceState:
     *next* step's off-chip HOSTW/HOSTR bursts may overlap when scheduled
     with ``async_host=True`` (Shared-PIM-style concurrent data flow). It is
     plain bookkeeping — zero on a fresh device, rewritten by every step,
-    and only consumed in async mode."""
+    and only consumed in async mode. A *data* pytree leaf (scalar, possibly
+    an on-device value): the scheduler writes the step's lazy compute time
+    here without a blocking ``float()`` sync, and the single-dispatch step
+    function consumes it as a traced argument."""
 
     banks: SubarrayState
     config: DeviceConfig
-    host_credit_ns: float = 0.0
+    host_credit_ns: float | jax.Array = 0.0
 
     @property
     def n_banks(self) -> int:
@@ -155,11 +158,13 @@ class DeviceState:
             lambda x: x[i:i + self.config.subarrays], self.banks)
 
     def with_banks(self, banks: SubarrayState,
-                   host_credit_ns: float | None = None) -> "DeviceState":
+                   host_credit_ns=None) -> "DeviceState":
+        """``host_credit_ns`` is stored as-is (float or lazy device scalar);
+        no blocking conversion happens here."""
         return DeviceState(banks=banks, config=self.config,
                            host_credit_ns=(self.host_credit_ns
                                            if host_credit_ns is None
-                                           else float(host_credit_ns)))
+                                           else host_credit_ns))
 
 
 def make_device(config: DeviceConfig, reserve: bool = True) -> DeviceState:
@@ -223,6 +228,20 @@ def channel_bus_model(cfg: DeviceConfig, issue_slot, host_slot, *,
     occupancy (float array, switch penalties included, overlap deducted),
     the total rank-switch penalty, and the total host time hidden.
     """
+    issue_ch, host_ch, switch_ch = channel_occupancy(cfg, issue_slot,
+                                                     host_slot)
+    hidden = np.minimum(host_ch, max(float(host_credit_ns), 0.0))
+    busy = issue_ch + host_ch - hidden + switch_ch
+    return busy, float(switch_ch.sum()), float(hidden.sum())
+
+
+def channel_occupancy(cfg: DeviceConfig, issue_slot, host_slot):
+    """The per-channel accumulation walk shared by ``channel_bus_model``
+    and the scheduler's async-credit fold: serialize bus-active slots FCFS
+    in slot order onto their bank's channel. Returns float64
+    ``(issue_ch, host_ch, switch_ch)`` arrays of length ``channels`` —
+    ISSUE occupancy, HOSTW/HOSTR occupancy (the part an async host engine
+    may hide), and accumulated ``tRTRS`` rank-switch penalties."""
     issue_slot = np.asarray(issue_slot, np.float64)
     host_slot = np.asarray(host_slot, np.float64)
     issue_ch = np.zeros(cfg.channels)
@@ -238,9 +257,7 @@ def channel_bus_model(cfg: DeviceConfig, issue_slot, host_slot, *,
         if last_rank[ch] is not None and last_rank[ch] != rk:
             switch_ch[ch] += cfg.timing.tRTRS
         last_rank[ch] = rk
-    hidden = np.minimum(host_ch, max(float(host_credit_ns), 0.0))
-    busy = issue_ch + host_ch - hidden + switch_ch
-    return busy, float(switch_ch.sum()), float(hidden.sum())
+    return issue_ch, host_ch, switch_ch
 
 
 def device_wall_ns(bus_ns, exec_ns) -> jnp.ndarray:

@@ -40,6 +40,12 @@ class ExecResult:
     reads: tuple
 
 
+# How many times a runner body was (re)traced by jit. Steady-state pipelines
+# must not grow this: regression tests assert "1 compile, then 0" across
+# recurring schedule steps.
+RUNNER_STATS = {"traces": 0}
+
+
 def _as_compiled(program, cfg) -> CompiledProgram:
     if isinstance(program, CompiledProgram):
         return program
@@ -282,6 +288,7 @@ def make_runner(program, cfg: DDR3Timing = DEFAULT_TIMING, *,
 
     @jax.jit
     def run(state: SubarrayState, payloads=None):
+        RUNNER_STATS["traces"] += 1      # executes at trace time only
         carry = (state.bits, state.mig_top, state.mig_bot, state.dcc)
         (bits, mt, mb, dcc), reads = _run_segments(
             compiled, carry, use_kernels, interpret, payloads=payloads)
@@ -312,6 +319,42 @@ def make_runner(program, cfg: DDR3Timing = DEFAULT_TIMING, *,
         runner.traced = run      # raw (state) -> (state, reads), for vmap
     cache[key] = runner
     return runner
+
+
+def make_pipeline_runner(program, cfg: DDR3Timing = DEFAULT_TIMING, *,
+                         use_kernels: bool | None = None,
+                         interpret: bool | None = None,
+                         refresh: bool = False):
+    """Build a jitted K-step pipeline ``(state, payload_steps) ->
+    (state, reads_steps)`` for ONE recurring program.
+
+    ``payload_steps`` is a ``(K, n_payloads, words)`` uint32 array — the
+    HOSTW data of each step; the same command stream executes K times under
+    one ``jax.lax.scan``, so a recurring single-subarray pipeline (e.g. a
+    ``PimVM.run_pipeline`` on an unsharded VM) costs one XLA dispatch total
+    instead of one per step. ``reads_steps`` leaves carry a leading step
+    axis. Cached per (program, flags, cfg) like :func:`make_runner`."""
+    compiled = _as_compiled(program, cfg)
+    if use_kernels is None:
+        use_kernels = _default_use_kernels()
+    base = make_runner(compiled, cfg, use_kernels=use_kernels,
+                       interpret=interpret, refresh=refresh,
+                       payload_arg=True)
+    cache = compiled._runner_cache      # make_runner just ensured it exists
+    key = ("pipeline", use_kernels, interpret, refresh, cfg)
+    if key in cache:
+        return cache[key]
+
+    @jax.jit
+    def run_pipe(state: SubarrayState, payload_steps):
+        def body(s, p):
+            out, reads = base.traced(s, p)
+            return out, reads
+
+        return jax.lax.scan(body, state, payload_steps)
+
+    cache[key] = run_pipe
+    return run_pipe
 
 
 def execute(program, state: SubarrayState | None = None,

@@ -31,6 +31,7 @@ errors instead of letting the executor mis-execute them.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Iterable
 
 import numpy as np
@@ -66,6 +67,70 @@ def copy_is_local(op: "PimOp") -> bool:
     the eager/compiled paths. The device scheduler additionally treats a
     destination equal to the carrying slot as local (``schedule.py``)."""
     return (op.delta, op.c) in ((COPY_SELF, COPY_SELF), (0, 0))
+
+# Columnar opcode encoding: the fixed integer code of every opcode. Order is
+# part of the on-the-wire columnar layout (and of the program digest), so new
+# opcodes append — never reorder.
+OPCODES = (OP_ISSUE, OP_ROWCLONE, OP_DRA, OP_TRA, OP_NOT2DCC, OP_DCC2,
+           OP_SHIFT, OP_WRITE, OP_READ, OP_FILL, OP_COPY)
+OP_CODE = {name: i for i, name in enumerate(OPCODES)}
+
+# How many columnar encodings (and digests) were built — regression tests
+# assert warm caches never rebuild them.
+COLUMN_STATS = {"builds": 0}
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramColumns:
+    """Array-native view of one op stream: an ``(n_ops, 6)`` int64 table
+    (columns ``code, a, b, c, delta, payload``; FILL words need the int64
+    headroom) plus a 128-bit content digest. Built ONCE per program (at
+    ``build``/``concat``/trace-import time, or lazily on first use) so the
+    cost pass, fusion, and stream-group hashing all run on arrays instead
+    of re-walking Python ``PimOp`` objects."""
+
+    table: np.ndarray
+    digest: bytes
+
+    @property
+    def code(self) -> np.ndarray:
+        return self.table[:, 0]
+
+    @property
+    def a(self) -> np.ndarray:
+        return self.table[:, 1]
+
+    @property
+    def b(self) -> np.ndarray:
+        return self.table[:, 2]
+
+    @property
+    def c(self) -> np.ndarray:
+        return self.table[:, 3]
+
+    @property
+    def delta(self) -> np.ndarray:
+        return self.table[:, 4]
+
+    @property
+    def payload(self) -> np.ndarray:
+        return self.table[:, 5]
+
+
+def _build_columns(ops: tuple) -> ProgramColumns:
+    COLUMN_STATS["builds"] += 1
+    table = np.empty((len(ops), 6), np.int64)
+    for i, o in enumerate(ops):
+        table[i, 0] = OP_CODE[o.op]
+        table[i, 1] = o.a
+        table[i, 2] = o.b
+        table[i, 3] = o.c
+        table[i, 4] = o.delta
+        table[i, 5] = o.payload
+    table.setflags(write=False)
+    digest = hashlib.blake2b(table.tobytes(), digest_size=16).digest()
+    return ProgramColumns(table=table, digest=digest)
+
 
 # Trace mnemonics (stable on-disk names), one line per command.
 _MNEMONIC = {
@@ -223,7 +288,13 @@ class PimOp:
 
 @dataclasses.dataclass(frozen=True)
 class PimProgram:
-    """An immutable recorded command stream for one subarray shape."""
+    """An immutable recorded command stream for one subarray shape.
+
+    Immutability covers the ``payloads`` data: executor jit constants and
+    the scheduler's identity-keyed payload cache key on it never changing.
+    ``ProgramBuilder.write_row`` and :meth:`with_payloads` snapshot (copy)
+    the rows for you; constructing a ``PimProgram`` directly with arrays
+    you keep writing to is a caller bug."""
 
     ops: tuple[PimOp, ...]
     num_rows: int = NUM_ROWS
@@ -232,6 +303,40 @@ class PimProgram:
 
     def __len__(self) -> int:
         return len(self.ops)
+
+    @property
+    def columns(self) -> ProgramColumns:
+        """Cached columnar encoding (see :class:`ProgramColumns`). Lazily
+        built on first access and memoized on the (frozen) instance —
+        ``build``/``concat``/trace import warm it eagerly so downstream
+        passes never pay the per-op walk twice."""
+        cols = getattr(self, "_columns", None)
+        if cols is None:
+            cols = _build_columns(self.ops)
+            object.__setattr__(self, "_columns", cols)
+        return cols
+
+    @property
+    def digest(self) -> bytes:
+        """Stable 128-bit content hash of the op stream (payload *data*
+        excluded — that is the stream-group contract). O(1) after the
+        columnar encoding is built."""
+        return self.columns.digest
+
+    def with_payloads(self, payloads) -> "PimProgram":
+        """Same command stream, different HOSTW payload data (the stream-
+        group pattern: one recorded step, per-bank/per-step data). Shares
+        this program's cached columnar encoding — no op re-walk, no
+        re-hash. The rows are snapshotted (copied), like
+        ``ProgramBuilder.write_row``: programs are immutable, and the
+        executor's jit constants and the scheduler's identity-keyed
+        payload cache rely on recorded data never changing under them."""
+        out = PimProgram(
+            ops=self.ops, num_rows=self.num_rows, words=self.words,
+            payloads=tuple(np.array(p, dtype=np.uint32, copy=True)
+                           for p in payloads))
+        object.__setattr__(out, "_columns", self.columns)
+        return out
 
     @property
     def n_reads(self) -> int:
@@ -411,9 +516,11 @@ def _parse_trace(text: str):
                 f"trace line {lineno} ({raw.strip()!r}): {msg}") from e
 
     def slot(b, s):
-        return PimProgram(ops=tuple(ops.get((b, s), ())), num_rows=num_rows,
+        prog = PimProgram(ops=tuple(ops.get((b, s), ())), num_rows=num_rows,
                           words=words,
                           payloads=tuple(payloads.get((b, s), ())))
+        prog.columns            # warm the columnar encoding + digest once
+        return prog
 
     return slot, banks, subarrays
 
@@ -470,8 +577,10 @@ class ProgramBuilder:
         return len(self._ops)
 
     def build(self) -> PimProgram:
-        return PimProgram(ops=tuple(self._ops), num_rows=self.num_rows,
+        prog = PimProgram(ops=tuple(self._ops), num_rows=self.num_rows,
                           words=self.words, payloads=tuple(self._payloads))
+        prog.columns            # warm the columnar encoding + digest once
+        return prog
 
     # -- primitives -----------------------------------------------------------
     def issue(self) -> "ProgramBuilder":
@@ -529,7 +638,10 @@ class ProgramBuilder:
         return self
 
     def write_row(self, dst, row) -> "ProgramBuilder":
-        row = np.asarray(row, dtype=np.uint32)
+        # snapshot (copy) the payload: programs are immutable, and both the
+        # executor's jit constants and the scheduler's identity-keyed
+        # payload cache rely on the recorded data never changing under them
+        row = np.array(row, dtype=np.uint32, copy=True)
         assert row.shape == (self.words,), (row.shape, self.words)
         self._ops.append(PimOp(OP_WRITE, b=self._resolve(dst),
                                payload=len(self._payloads)))
@@ -615,5 +727,7 @@ def concat(programs: Iterable[PimProgram]) -> PimProgram:
                 o = dataclasses.replace(o, payload=o.payload + off)
             ops.append(o)
         payloads.extend(p.payloads)
-    return PimProgram(ops=tuple(ops), num_rows=rows, words=words,
-                      payloads=tuple(payloads))
+    out = PimProgram(ops=tuple(ops), num_rows=rows, words=words,
+                     payloads=tuple(payloads))
+    out.columns                 # warm the columnar encoding + digest once
+    return out

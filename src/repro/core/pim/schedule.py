@@ -53,10 +53,20 @@ axis), and ``gather_rows`` / ``xor_reduce_program`` are the in-DRAM
 movement/reduction building blocks the benchmarks use to exchange rows
 between slots without host round-trips (RS syndrome sums across banks,
 cross-lane reductions).
+
+Host-side performance model (DESIGN.md §10): one ``schedule`` call is ONE
+XLA dispatch. Grouping hashes the programs' cached columnar digests (O(1)
+per slot), the per-call layout resolves to a cached :class:`_StepPlan`
+whose jitted step function folds every stream group, the COPY drain, and
+the channel-bus model into a single compiled computation, and all returned
+timing values stay lazy (device/numpy) until read. ``schedule_pipeline``
+runs K recurring steps under one ``jax.lax.scan`` — steady-state per-step
+cost is one scan iteration, not a Python round-trip.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Sequence
 
 import jax
@@ -66,40 +76,108 @@ import numpy as np
 from . import exec as pim_exec
 from . import ir
 from .compile import CompiledProgram, compile_program
-from .device import (DeviceConfig, DeviceState, channel_bus_model,
+from .device import (DeviceConfig, DeviceState, channel_occupancy,
                      host_bus_ns, issue_bus_ns)
 from .ir import PimProgram, ProgramBuilder
 from .state import NUM_ROWS
-from .timing import DDR3Timing, copy_cost
+from .timing import DDR3Timing, DEFAULT_TIMING, copy_cost
+
+
+def _unbatch_reads(group_reads, read_layout, n_steps=None):
+    """Shared lazy read unbatching: ONE device->host transfer per group
+    read array, then plain numpy slicing into the per-slot layout. With
+    ``n_steps`` the arrays carry a leading step axis and a per-step list
+    is returned."""
+    n_slots, group_slots = read_layout
+    host = [tuple(np.asarray(r) for r in g) for g in group_reads]
+
+    def one_step(pick):
+        out: list = [()] * n_slots
+        for g, slots in enumerate(group_slots):
+            for j, k in enumerate(slots):
+                out[k] = tuple(pick(r, j) for r in host[g])
+        return tuple(out)
+
+    if n_steps is None:
+        return one_step(lambda r, j: r[j])
+    return [one_step(lambda r, j, k=k: r[k, j]) for k in range(n_steps)]
 
 
 @dataclasses.dataclass
 class ScheduleResult:
-    """Outcome of one device-level schedule step."""
+    """Outcome of one device-level schedule step.
+
+    Timing metrics that may live on-device (async mode makes the channel
+    occupancy depend on the previous step's lazy compute window) are stored
+    raw in underscored fields and converted on *access* — reading
+    ``host_overlap_ns`` etc. yields plain floats exactly as before, but
+    constructing the result never blocks on the device, so back-to-back
+    ``schedule`` calls dispatch asynchronously."""
 
     state: DeviceState
     wall_ns: jax.Array          # max-channel bus + max in-slot exec + copies
-    bus_ns: jax.Array           # total bus occupancy, summed over slots
+    bus_ns: float               # total bus occupancy, summed over slots
     energy_nj: jax.Array        # summed across slots (this step only)
-    reads: tuple                # per slot: host-read rows in slot order
     copy_ns: float = 0.0        # COPY drain *makespan* (link-contended wall)
     host_bytes: int = 0         # off-chip bytes this step's streams moved
-    host_bus_ns: float = 0.0    # HOSTW/HOSTR burst occupancy, Σ over slots
-    channel_bus_ns: tuple = ()  # per-channel serialized occupancy (+tRTRS)
     rank_switch_ns: float = 0.0  # total tRTRS penalty charged this step
-    host_overlap_ns: float = 0.0  # host time hidden under prev step (async)
     copy_total_ns: float = 0.0  # Σ per-copy duration (old copy_ns meaning)
     copy_queue_ns: float = 0.0  # Σ FCFS waiting behind busy links/buses
     link_busy_ns: dict = dataclasses.field(default_factory=dict)
     # per-resource occupancy: ("link", bank, i) RBM link between subarrays
     # i/i+1, ("ibus", channel) the channel's shared internal bus.
+    _host_bus_ns: float = 0.0   # HOSTW/HOSTR burst occupancy, Σ over slots
+    _channel_bus_ns: object = ()  # per-channel occupancy (may be on-device)
+    _host_overlap_ns: object = 0.0  # host time hidden under prev step
+    _group_reads: tuple = ()    # per group: per-read (n_group, words) arrays
+    _read_layout: tuple = (0, ())  # (n_slots, group slot-id tuples)
+
+    @property
+    def reads(self) -> tuple:
+        """Per slot: host-read rows in ``read_row`` slot order. The jitted
+        step returns reads batched per stream group; the per-slot view is
+        sliced out lazily here (and memoized) so the hot scheduling path
+        never pays per-slot unbatching."""
+        cached = getattr(self, "_reads_cache", None)
+        if cached is None:
+            cached = _unbatch_reads(self._group_reads, self._read_layout)
+            self._reads_cache = cached
+        return cached
+
+    @property
+    def host_bus_ns(self) -> float:
+        return float(self._host_bus_ns)
+
+    @property
+    def host_overlap_ns_lazy(self):
+        """The raw (possibly on-device) hidden-host-time value — for
+        accumulators that must not block (``host_overlap_ns`` converts)."""
+        return self._host_overlap_ns
+
+    @property
+    def channel_bus_ns(self) -> tuple:
+        """Per-channel serialized occupancy (+tRTRS), as floats."""
+        return tuple(float(x) for x in self._channel_bus_ns)
+
+    @property
+    def host_overlap_ns(self) -> float:
+        return float(self._host_overlap_ns)
 
 
 def stream_key(p: PimProgram):
     """Slots with equal keys share one compiled vmapped runner: identical
     command stream and shape; HOSTW payload *data* is excluded (it is passed
-    per-slot at run time)."""
-    return (p.ops, p.num_rows, p.words, len(p.payloads))
+    per-slot at run time). O(1): the stream itself is represented by the
+    program's cached 128-bit columnar digest, not re-hashed per call."""
+    return (p.digest, p.num_rows, p.words, len(p.payloads))
+
+
+# Host-orchestration counters, reset-able by tests/benchmarks:
+#   dispatches     — XLA dispatches issued by schedule()/schedule_pipeline()
+#                    (the acceptance bar is <= 1 per steady-state step)
+#   plan_misses    — step-plan cache misses (a new schedule layout)
+#   compile_misses — _compiled_for cache misses (a new program stream)
+SCHED_STATS = {"dispatches": 0, "plan_misses": 0, "compile_misses": 0}
 
 
 # One compiled artifact per distinct (stream, timing): groups recur across
@@ -115,6 +193,7 @@ def _compiled_for(program: PimProgram, timing: DDR3Timing) -> CompiledProgram:
     key = (stream_key(program), timing)
     hit = _compile_cache.pop(key, None)
     if hit is None:
+        SCHED_STATS["compile_misses"] += 1
         if len(_compile_cache) >= _COMPILE_CACHE_MAX:
             _compile_cache.pop(next(iter(_compile_cache)))
         hit = compile_program(program, timing)
@@ -122,13 +201,49 @@ def _compiled_for(program: PimProgram, timing: DDR3Timing) -> CompiledProgram:
     return hit
 
 
+def compiled_for(program: PimProgram,
+                 timing: DDR3Timing = DEFAULT_TIMING) -> CompiledProgram:
+    """Public entry to the scheduler's LRU compile cache: equal streams
+    (by columnar digest) share one :class:`CompiledProgram` — and thereby
+    one set of jitted runners — across calls. Use this instead of
+    ``compile_program`` for recurring streams (``PimVM`` does)."""
+    return _compiled_for(program, timing)
+
+
+# Stacked payload batches keyed on the *identity* of the payload arrays:
+# recurring flushes (PimVM pipelines) schedule the same PimProgram objects
+# over and over, and re-np.stack-ing identical host data plus re-uploading
+# it to the device every step was pure waste. Cache values hold references
+# to the source arrays, pinning their ids for the lifetime of the entry
+# (so a recycled id can never alias a dead key). LRU-bounded.
+_payload_cache: dict = {}
+_PAYLOAD_CACHE_MAX = 256
+
+
 def _payload_stack(programs: Sequence[PimProgram], words: int) -> jnp.ndarray:
     """(n_slots_in_group, n_payloads, words) uint32 HOSTW payload batch."""
     n_pay = len(programs[0].payloads)
     if n_pay == 0:
-        return jnp.zeros((len(programs), 0, words), jnp.uint32)
-    return jnp.asarray(np.stack(
-        [np.stack(p.payloads) for p in programs]).astype(np.uint32))
+        key = ("zeros", len(programs), words)
+    else:
+        # shape prefix disambiguates the partitioning: the same id sequence
+        # could otherwise alias e.g. 2 programs x 2 payloads vs 4 x 1
+        key = (len(programs), n_pay, words) + tuple(
+            id(a) for p in programs for a in p.payloads)
+    hit = _payload_cache.pop(key, None)
+    if hit is None:
+        if len(_payload_cache) >= _PAYLOAD_CACHE_MAX:
+            _payload_cache.pop(next(iter(_payload_cache)))
+        if n_pay == 0:
+            stacked = jnp.zeros((len(programs), 0, words), jnp.uint32)
+            refs = ()
+        else:
+            stacked = jnp.asarray(np.stack(
+                [np.stack(p.payloads) for p in programs]).astype(np.uint32))
+            refs = tuple(p.payloads for p in programs)
+        hit = (stacked, refs)
+    _payload_cache[key] = hit           # (re)insert at the MRU end
+    return hit[0]
 
 
 def _normalize_programs(cfg: DeviceConfig, programs) -> list:
@@ -167,8 +282,19 @@ def _normalize_programs(cfg: DeviceConfig, programs) -> list:
 def _split_copies(cfg: DeviceConfig, slot: int, program: PimProgram):
     """Partition one slot's stream into (compiled-stream program, deferred
     cross-slot copies). Same-slot COPYs are normalized to the executor's
-    local ``COPY_SELF`` encoding and stay in-stream."""
+    local ``COPY_SELF`` encoding and stay in-stream.
+
+    The no-copy common case is detected vectorized on the columnar
+    encoding (no per-op Python walk); only streams that actually carry
+    cross-slot or explicitly-self-addressed COPYs take the op loop."""
+    cols = program.columns
+    is_copy = cols.code == ir.OP_CODE[ir.OP_COPY]
     b, s = cfg.slot_coords(slot)
+    if not is_copy.any():
+        return program, []              # no COPYs at all: nothing to strip
+    self_like = (cols.delta == ir.COPY_SELF) & (cols.c == ir.COPY_SELF)
+    if not (is_copy & ~self_like).any():
+        return program, []              # every COPY already local-encoded
     self_dst = (ir.COPY_SELF, ir.COPY_SELF)
     kept, deferred = [], []
     changed = False
@@ -238,43 +364,42 @@ def _copy_route(cfg: DeviceConfig, src_slot: int, dst_slot: int):
     return hops, True, res
 
 
-def _apply_copies(cfg: DeviceConfig, banks, deferred):
-    """Drain deferred cross-slot copies on the post-compute state: move the
-    rows in (slot, stream-position) order, charge ``copy_cost`` onto each
-    source slot's meter, and serialize contended links/buses FCFS in the
-    same order. Returns (banks', CopyDrainStats)."""
+@dataclasses.dataclass(frozen=True)
+class _CopyDrainPlan:
+    """Route-table + FCFS outcome of one copy *pattern* (the (src, dst)
+    slot pairs, in drain order). Rows are not part of the pattern — the
+    same gather shape recurs step after step with different rows, and
+    everything here depends only on the slots, so it is computed once and
+    cached."""
+
+    dt_slot: np.ndarray         # (n_slots,) float32 Σ copy time per source
+    e_act_slot: np.ndarray      # (n_slots,) float32
+    e_pre_slot: np.ndarray      # (n_slots,) float32
+    n_act_slot: np.ndarray      # (n_slots,) int32
+    n_pre_slot: np.ndarray      # (n_slots,) int32
+    n_aap_slot: np.ndarray      # (n_slots,) int32
+    stats: CopyDrainStats
+
+
+@functools.lru_cache(maxsize=256)
+def _copy_drain_plan(cfg: DeviceConfig, pairs: tuple) -> _CopyDrainPlan:
+    """Per-copy route tables and ``timing.copy_cost`` charges (computed
+    once per pair in the FCFS walk), per-source meter increments (one
+    ``np.add.at`` scatter per field), and the FCFS link/bus serialization
+    — all keyed on (device, copy pattern) so recurring steps skip the
+    whole computation."""
     t = cfg.timing
     n = cfg.n_slots
-    dt = np.zeros(n, np.float32)
-    e_act = np.zeros(n, np.float32)
-    e_pre = np.zeros(n, np.float32)
-    n_act = np.zeros(n, np.int32)
-    n_pre = np.zeros(n, np.int32)
-    n_aap = np.zeros(n, np.int32)
-    srcs = [(k, op.a) for k, _, op in deferred]
-    dsts = [(d, op.b) for _, d, op in deferred]
-    bits = banks.bits
-    if len(set(dsts)) == len(dsts) and not set(dsts) & set(srcs):
-        # Independent copies (the common gather pattern: distinct
-        # destinations, none feeding a later copy) — ONE batched scatter
-        # instead of a dispatch per row.
-        si, sr = (jnp.asarray([x[j] for x in srcs]) for j in (0, 1))
-        di, dr = (jnp.asarray([x[j] for x in dsts]) for j in (0, 1))
-        bits = bits.at[di, dr].set(bits[si, sr])
-    else:
-        for src_slot, dst_slot, op in deferred:
-            bits = bits.at[dst_slot, op.b].set(bits[src_slot, op.a])
+    src = np.fromiter((p[0] for p in pairs), np.int64, len(pairs))
+    dt = np.zeros(len(pairs))
+    e_act = np.zeros(len(pairs))
     stats = CopyDrainStats()
     ready: dict = {}                    # resource -> busy-until (drain clock)
-    for src_slot, dst_slot, op in deferred:
+    for i, (src_slot, dst_slot) in enumerate(pairs):
         hops, inter_bank, resources = _copy_route(cfg, src_slot, dst_slot)
-        c_dt, c_ea, c_ep, c_na, c_np, c_naap = copy_cost(hops, inter_bank, t)
-        dt[src_slot] += np.float32(c_dt)
-        e_act[src_slot] += np.float32(c_ea)
-        e_pre[src_slot] += np.float32(c_ep)
-        n_act[src_slot] += c_na
-        n_pre[src_slot] += c_np
-        n_aap[src_slot] += c_naap
+        c_dt, c_ea, _, _, _, _ = copy_cost(hops, inter_bank, t)
+        dt[i] = c_dt
+        e_act[i] = c_ea
         start = max((ready.get(r, 0.0) for r in resources), default=0.0)
         end = start + c_dt
         for r in resources:
@@ -283,18 +408,220 @@ def _apply_copies(cfg: DeviceConfig, banks, deferred):
         stats.queue_ns += start
         stats.total_ns += c_dt
         stats.makespan_ns = max(stats.makespan_ns, end)
-    m = banks.meter
-    meter = dataclasses.replace(
-        m,
-        time_ns=m.time_ns + jnp.asarray(dt),
-        e_act=m.e_act + jnp.asarray(e_act),
-        e_pre=m.e_pre + jnp.asarray(e_pre),
-        e_background=m.e_background
-        + jnp.asarray(dt) * jnp.float32(t.p_background),
-        n_act=m.n_act + jnp.asarray(n_act),
-        n_pre=m.n_pre + jnp.asarray(n_pre),
-        n_aap=m.n_aap + jnp.asarray(n_aap))
-    return dataclasses.replace(banks, bits=bits, meter=meter), stats
+    dt_slot = np.zeros(n, np.float32)
+    e_act_slot = np.zeros(n, np.float32)
+    e_pre_slot = np.zeros(n, np.float32)
+    n_act_slot = np.zeros(n, np.int32)
+    n_pre_slot = np.zeros(n, np.int32)
+    n_aap_slot = np.zeros(n, np.int32)
+    np.add.at(dt_slot, src, dt.astype(np.float32))
+    np.add.at(e_act_slot, src, e_act.astype(np.float32))
+    np.add.at(e_pre_slot, src, np.float32(t.e_pre))
+    np.add.at(n_act_slot, src, np.int32(2))
+    np.add.at(n_pre_slot, src, np.int32(1))
+    np.add.at(n_aap_slot, src, np.int32(1))
+    return _CopyDrainPlan(dt_slot=dt_slot, e_act_slot=e_act_slot,
+                          e_pre_slot=e_pre_slot, n_act_slot=n_act_slot,
+                          n_pre_slot=n_pre_slot, n_aap_slot=n_aap_slot,
+                          stats=stats)
+
+
+@dataclasses.dataclass
+class _StepPlan:
+    """One schedule layout, fully lowered: the jitted single-dispatch step
+    function plus every static (trace-time) quantity of the step. Cached
+    per (device config, flags, group signature, copy signature) so a
+    recurring step pays ONE dict lookup + one XLA dispatch."""
+
+    fn: object                  # jitted (banks, credit, payloads) -> ...
+    raw_fn: object              # same, unjitted (inlined into pipelines)
+    group_slots: tuple          # tuple of slot-id tuples, plan group order
+    bus_total: float            # Σ per-slot bus occupancy
+    host_bus_total: float       # Σ per-slot host-burst occupancy
+    chan_busy: tuple            # per-channel occupancy at credit=0 (+tRTRS)
+    switch_ns: float
+    host_bytes: int
+    copy: "_CopyDrainPlan | None"
+
+
+_plan_cache: dict = {}
+_PLAN_CACHE_MAX = 256
+
+
+def _make_step_fn(cfg: DeviceConfig, runners, group_slots, bus_j,
+                  chan_busy0, host_ch, copy_plan, copy_moves,
+                  copy_independent, async_host):
+    """Build the single-dispatch jitted step: every stream group's vmapped
+    run, the COPY drain (bits scatter + meter bump), and the channel-bus
+    fold — one traced computation, one XLA dispatch per call."""
+    n_slots = cfg.n_slots
+    bus_j_c = jnp.asarray(bus_j)
+    busy0_c = jnp.asarray(chan_busy0, jnp.float32)
+    host_ch_c = jnp.asarray(host_ch, jnp.float32)
+    p_bg = jnp.float32(cfg.timing.p_background)
+    idx_arrays = [jnp.asarray(np.asarray(slots)) for slots in group_slots]
+    makespan = jnp.float32(copy_plan.stats.makespan_ns if copy_plan else 0.0)
+
+    def step(banks, credit, payloads):
+        t0 = jnp.asarray(banks.meter.time_ns)
+        e0 = jnp.asarray(banks.meter.total_energy_nj)
+        new_banks = banks
+        reads = []
+        for g, runner in enumerate(runners):
+            if group_slots[g] == tuple(range(n_slots)):
+                # group covers every slot: no gather/scatter round-trip
+                # (the homogeneous fast path — one vmap over the banks)
+                out, group_reads = jax.vmap(runner.traced)(banks,
+                                                           payloads[g])
+                new_banks = out
+            else:
+                idx = idx_arrays[g]
+                sub = jax.tree_util.tree_map(lambda x: x[idx], banks)
+                out, group_reads = jax.vmap(runner.traced)(sub, payloads[g])
+                new_banks = jax.tree_util.tree_map(
+                    lambda full, upd: full.at[idx].set(upd), new_banks, out)
+            reads.append(group_reads)   # batched: per-slot view sliced lazily
+        # In-slot execution excludes each slot's own bus occupancy and the
+        # drained copies (accounted by the contention model below).
+        exec_ns = jnp.asarray(new_banks.meter.time_ns) - t0 - bus_j_c
+        if copy_plan is not None:
+            bits = new_banks.bits
+            si, sr, di, dr = copy_moves
+            if copy_independent:
+                # Independent copies (the common gather pattern: distinct
+                # destinations, none feeding a later copy) — ONE batched
+                # scatter instead of a row-at-a-time chain.
+                bits = bits.at[jnp.asarray(di), jnp.asarray(dr)].set(
+                    bits[jnp.asarray(si), jnp.asarray(sr)])
+            else:
+                for s_slot, s_row, d_slot, d_row in zip(si, sr, di, dr):
+                    bits = bits.at[d_slot, d_row].set(bits[s_slot, s_row])
+            m = new_banks.meter
+            meter = dataclasses.replace(
+                m,
+                time_ns=m.time_ns + jnp.asarray(copy_plan.dt_slot),
+                e_act=m.e_act + jnp.asarray(copy_plan.e_act_slot),
+                e_pre=m.e_pre + jnp.asarray(copy_plan.e_pre_slot),
+                e_background=m.e_background
+                + jnp.asarray(copy_plan.dt_slot) * p_bg,
+                n_act=m.n_act + jnp.asarray(copy_plan.n_act_slot),
+                n_pre=m.n_pre + jnp.asarray(copy_plan.n_pre_slot),
+                n_aap=m.n_aap + jnp.asarray(copy_plan.n_aap_slot))
+            new_banks = dataclasses.replace(new_banks, bits=bits,
+                                            meter=meter)
+        e1 = jnp.asarray(new_banks.meter.total_energy_nj)
+        compute_ns = jnp.max(exec_ns) + makespan
+        if async_host:
+            hidden = jnp.minimum(
+                host_ch_c,
+                jnp.maximum(jnp.asarray(credit, jnp.float32), 0.0))
+        else:
+            hidden = jnp.zeros_like(host_ch_c)
+        busy = busy0_c - hidden
+        wall = jnp.max(busy) + compute_ns
+        energy = jnp.sum(e1 - e0)
+        return (new_banks, tuple(reads), wall, energy, compute_ns, busy,
+                jnp.sum(hidden))
+
+    return jax.jit(step), step
+
+
+def _plan_for(cfg: DeviceConfig, stripped, groups, deferred, *,
+              use_kernels, interpret, refresh, async_host) -> _StepPlan:
+    """Resolve (and cache) the step plan of one schedule layout."""
+    plan_key = (cfg, use_kernels, interpret, refresh, async_host,
+                tuple((key, tuple(slots)) for key, slots in groups.items()),
+                tuple((s, d, op.a, op.b) for s, d, op in deferred))
+    plan = _plan_cache.pop(plan_key, None)
+    if plan is not None:
+        _plan_cache[plan_key] = plan    # (re)insert at the MRU end
+        return plan
+    SCHED_STATS["plan_misses"] += 1
+
+    runners, group_slots = [], []
+    issue_bus = np.zeros(cfg.n_slots, np.float32)
+    host_bus = np.zeros(cfg.n_slots, np.float32)
+    for key, slot_ids in groups.items():
+        rep = stripped[slot_ids[0]]
+        compiled = _compiled_for(rep, cfg.timing)
+        runners.append(pim_exec.make_runner(
+            compiled, cfg.timing, use_kernels=use_kernels,
+            interpret=interpret, refresh=refresh, payload_arg=True))
+        group_slots.append(tuple(slot_ids))
+        g_issue = issue_bus_ns(rep, cfg.timing)
+        g_host = host_bus_ns(rep, cfg.timing)
+        for k in slot_ids:
+            issue_bus[k] = g_issue
+            host_bus[k] = g_host
+
+    issue_ch, host_ch, switch_ch = channel_occupancy(cfg, issue_bus,
+                                                     host_bus)
+    chan_busy0 = issue_ch + host_ch + switch_ch
+    switch_ns = float(switch_ch.sum())
+
+    copy_plan = None
+    copy_moves = None
+    copy_independent = False
+    if deferred:
+        copy_plan = _copy_drain_plan(
+            cfg, tuple((s, d) for s, d, _ in deferred))
+        srcs = [(k, op.a) for k, _, op in deferred]
+        dsts = [(d, op.b) for _, d, op in deferred]
+        copy_independent = (len(set(dsts)) == len(dsts)
+                            and not set(dsts) & set(srcs))
+        copy_moves = (tuple(x[0] for x in srcs), tuple(x[1] for x in srcs),
+                      tuple(x[0] for x in dsts), tuple(x[1] for x in dsts))
+
+    host_bytes = sum(
+        len(slots) * stripped[slots[0]].host_bytes
+        for slots in group_slots)
+
+    fn, raw_fn = _make_step_fn(cfg, tuple(runners), tuple(group_slots),
+                               issue_bus + host_bus, chan_busy0, host_ch,
+                               copy_plan, copy_moves, copy_independent,
+                               async_host)
+    plan = _StepPlan(
+        fn=fn,
+        raw_fn=raw_fn,
+        group_slots=tuple(group_slots),
+        bus_total=float((issue_bus + host_bus).sum(dtype=np.float64)),
+        host_bus_total=float(host_bus.sum(dtype=np.float64)),
+        chan_busy=tuple(float(x) for x in chan_busy0),
+        switch_ns=switch_ns,
+        host_bytes=host_bytes,
+        copy=copy_plan)
+    if len(_plan_cache) >= _PLAN_CACHE_MAX:
+        _plan_cache.pop(next(iter(_plan_cache)))
+    _plan_cache[plan_key] = plan
+    return plan
+
+
+def _lower_step(cfg: DeviceConfig, programs):
+    """Shared front half of schedule()/schedule_pipeline(): normalize the
+    layout, strip cross-slot copies, group by stream digest. Returns
+    ``(flat, stripped, groups, deferred)``."""
+    flat = _normalize_programs(cfg, programs)
+    for k, p in enumerate(flat):
+        if p is not None and (p.num_rows, p.words) != (cfg.num_rows,
+                                                       cfg.words):
+            raise ValueError(
+                f"slot {cfg.slot_coords(k)}: program shape "
+                f"{(p.num_rows, p.words)} != device "
+                f"shape {(cfg.num_rows, cfg.words)}")
+
+    deferred: list = []
+    stripped: list = [None] * cfg.n_slots
+    for k, p in enumerate(flat):
+        if p is None:
+            continue
+        stripped[k], slot_copies = _split_copies(cfg, k, p)
+        deferred.extend(slot_copies)
+
+    groups: dict = {}
+    for k, p in enumerate(stripped):
+        if p is not None and len(p.ops):
+            groups.setdefault(stream_key(p), []).append(k)
+    return flat, stripped, groups, deferred
 
 
 def schedule(device: DeviceState,
@@ -323,89 +650,236 @@ def schedule(device: DeviceState,
     multi-step pipeline pays ``max(transfer, compute)`` per step instead of
     the sum. Only the wall clock changes — states, reads, and energy are
     identical to the synchronous schedule.
+
+    The whole step — every stream group, the COPY drain, and the
+    channel-bus fold — executes as ONE jitted dispatch (the step plan is
+    cached per layout), and the result's timing values stay lazy; no
+    blocking device sync happens inside this call.
     """
     cfg = device.config
-    flat = _normalize_programs(cfg, programs)
-    for k, p in enumerate(flat):
-        if p is not None and (p.num_rows, p.words) != (cfg.num_rows,
-                                                       cfg.words):
-            raise ValueError(
-                f"slot {cfg.slot_coords(k)}: program shape "
-                f"{(p.num_rows, p.words)} != device "
-                f"shape {(cfg.num_rows, cfg.words)}")
-
-    deferred: list = []
-    stripped: list = [None] * cfg.n_slots
-    for k, p in enumerate(flat):
-        if p is None:
-            continue
-        stripped[k], slot_copies = _split_copies(cfg, k, p)
-        deferred.extend(slot_copies)
-
-    groups: dict = {}
-    for k, p in enumerate(stripped):
-        if p is not None and len(p.ops):
-            groups.setdefault(stream_key(p), []).append(k)
-
-    banks = device.banks
-    t0 = jnp.asarray(banks.meter.time_ns)
-    e0 = jnp.asarray(banks.meter.total_energy_nj)
-    new_banks = banks
-    reads: list[tuple] = [() for _ in range(cfg.n_slots)]
-    issue_bus = np.zeros(cfg.n_slots, np.float32)
-    host_bus = np.zeros(cfg.n_slots, np.float32)
-
-    for key, slot_ids in groups.items():
-        group_progs = [stripped[k] for k in slot_ids]
-        compiled = _compiled_for(group_progs[0], cfg.timing)
-        runner = pim_exec.make_runner(
-            compiled, cfg.timing, use_kernels=use_kernels,
-            interpret=interpret, refresh=refresh, payload_arg=True)
-        idx = jnp.asarray(slot_ids)
-        sub = jax.tree_util.tree_map(lambda x: x[idx], banks)
-        out, group_reads = jax.vmap(runner.traced)(
-            sub, _payload_stack(group_progs, cfg.words))
-        new_banks = jax.tree_util.tree_map(
-            lambda full, upd: full.at[idx].set(upd), new_banks, out)
-        group_issue = issue_bus_ns(group_progs[0], cfg.timing)
-        group_host = host_bus_ns(group_progs[0], cfg.timing)
-        for j, k in enumerate(slot_ids):
-            reads[k] = tuple(r[j] for r in group_reads)
-            issue_bus[k] = group_issue
-            host_bus[k] = group_host
-
-    # In-slot execution excludes each slot's own bus occupancy and the
-    # drained copies (accounted by the contention model below).
-    bus_j = jnp.asarray(issue_bus + host_bus)
-    exec_ns = jnp.asarray(new_banks.meter.time_ns) - t0 - bus_j
-
-    copies = CopyDrainStats()
-    if deferred:
-        new_banks, copies = _apply_copies(cfg, new_banks, deferred)
-
-    e1 = jnp.asarray(new_banks.meter.total_energy_nj)
-    chan_busy, switch_ns, hidden_ns = channel_bus_model(
-        cfg, issue_bus, host_bus,
-        host_credit_ns=device.host_credit_ns if async_host else 0.0)
-    compute_ns = (jnp.max(exec_ns) if exec_ns.size else jnp.float32(0.0)) \
-        + jnp.float32(copies.makespan_ns)
-    wall = jnp.float32(chan_busy.max()) + compute_ns
+    _, stripped, groups, deferred = _lower_step(cfg, programs)
+    plan = _plan_for(cfg, stripped, groups, deferred,
+                     use_kernels=use_kernels, interpret=interpret,
+                     refresh=refresh, async_host=async_host)
+    payloads = tuple(
+        _payload_stack([stripped[k] for k in slots], cfg.words)
+        for slots in plan.group_slots)
+    credit = device.host_credit_ns
+    if not isinstance(credit, jax.Array):
+        credit = jnp.float32(credit)
+    new_banks, greads, wall, energy, compute_ns, busy, hidden_sum = plan.fn(
+        device.banks, credit, payloads)
+    SCHED_STATS["dispatches"] += 1
+    stats = plan.copy.stats if plan.copy is not None else CopyDrainStats()
     return ScheduleResult(
-        state=device.with_banks(new_banks,
-                                host_credit_ns=float(compute_ns)),
+        state=device.with_banks(new_banks, host_credit_ns=compute_ns),
         wall_ns=wall,
-        bus_ns=jnp.sum(bus_j),
-        energy_nj=jnp.sum(e1 - e0),
-        reads=tuple(reads),
-        copy_ns=copies.makespan_ns,
-        host_bytes=sum(p.host_bytes for p in flat if p is not None),
-        host_bus_ns=float(host_bus.sum()),
-        channel_bus_ns=tuple(float(x) for x in chan_busy),
-        rank_switch_ns=switch_ns,
-        host_overlap_ns=hidden_ns,
-        copy_total_ns=copies.total_ns,
-        copy_queue_ns=copies.queue_ns,
-        link_busy_ns=dict(copies.link_busy_ns))
+        bus_ns=plan.bus_total,
+        energy_nj=energy,
+        _group_reads=greads,
+        _read_layout=(cfg.n_slots, plan.group_slots),
+        copy_ns=stats.makespan_ns,
+        host_bytes=plan.host_bytes,
+        rank_switch_ns=plan.switch_ns,
+        copy_total_ns=stats.total_ns,
+        copy_queue_ns=stats.queue_ns,
+        link_busy_ns=dict(stats.link_busy_ns),
+        _host_bus_ns=plan.host_bus_total,
+        _channel_bus_ns=busy if async_host else plan.chan_busy,
+        _host_overlap_ns=hidden_sum if async_host else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Multi-step pipelines: K recurring steps under one lax.scan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PipelineResult:
+    """Outcome of ``schedule_pipeline``: K steps of one recurring layout.
+
+    Per-step timing arrays carry a leading step axis and stay lazy until
+    read; the static per-step quantities (bus occupancy, copy drain stats,
+    host bytes) are identical every step — the layout recurs by
+    construction."""
+
+    state: DeviceState          # final device (credit = last step's compute)
+    wall_ns: jax.Array          # (K,) per-step wall clock
+    energy_nj: jax.Array        # (K,) per-step energy
+    n_steps: int
+    bus_ns: float               # per-step bus occupancy (Σ slots)
+    host_bytes: int             # per-step off-chip bytes
+    copy_ns: float = 0.0        # per-step COPY drain makespan
+    copy_total_ns: float = 0.0
+    copy_queue_ns: float = 0.0
+    rank_switch_ns: float = 0.0
+    link_busy_ns: dict = dataclasses.field(default_factory=dict)
+    _group_reads: tuple = ()    # per group: per-read (K, n_group, words)
+    _read_layout: tuple = (0, ())  # (n_slots, group slot-id tuples)
+    _host_overlap_ns: object = 0.0  # (K,) in async mode, else 0.0
+
+    @property
+    def reads(self) -> list:
+        """Per-step reads, same nesting as ``ScheduleResult.reads``:
+        ``reads[k][slot]`` is the slot's host-read rows of step ``k``.
+        Sliced out of the group-batched scan output lazily (memoized)."""
+        cached = getattr(self, "_reads_cache", None)
+        if cached is None:
+            cached = _unbatch_reads(self._group_reads, self._read_layout,
+                                    self.n_steps)
+            self._reads_cache = cached
+        return cached
+
+    @property
+    def host_overlap_ns_lazy(self):
+        """Raw per-step hidden-host-time values (see
+        ``ScheduleResult.host_overlap_ns_lazy``)."""
+        return self._host_overlap_ns
+
+    @property
+    def total_wall_ns(self) -> float:
+        return float(jnp.sum(self.wall_ns))
+
+    @property
+    def host_overlap_ns(self) -> float:
+        """Total host-transfer time hidden across the pipeline (async)."""
+        return float(jnp.sum(jnp.asarray(self._host_overlap_ns)))
+
+
+def _stack_step_payloads(pay_list):
+    """Stack per-step payload batches into the scan's ``(K, ...)`` xs. A
+    fully-replicated pipeline (every step the same cached batch) reuses one
+    stacked device array via the payload cache instead of re-uploading K
+    copies of identical host data per call."""
+    if any(p is not pay_list[0] for p in pay_list):
+        return jnp.stack(pay_list)
+    key = ("steps", len(pay_list), id(pay_list[0]))
+    hit = _payload_cache.pop(key, None)
+    if hit is None:
+        if len(_payload_cache) >= _PAYLOAD_CACHE_MAX:
+            _payload_cache.pop(next(iter(_payload_cache)))
+        # the cache entry holds the source batch, pinning its id
+        hit = (jnp.stack([pay_list[0]] * len(pay_list)), pay_list[0])
+    _payload_cache[key] = hit
+    return hit[0]
+
+
+_pipeline_cache: dict = {}
+_PIPELINE_CACHE_MAX = 64
+
+
+def _pipeline_fn(plan: _StepPlan, n_steps: int, donate: bool):
+    """One jitted scan over the plan's step function. With ``donate`` the
+    input device buffers are donated to the scan (the caller's state is
+    consumed in place); CPU ignores donation, so it is skipped there to
+    avoid warnings."""
+    key = (id(plan), n_steps, donate)
+    hit = _pipeline_cache.pop(key, None)
+    if hit is None:
+        def pipe(banks, credit, xs):
+            def body(carry, x):
+                b, c = carry
+                nb, reads, wall, energy, compute, _busy, hidden = \
+                    plan.raw_fn(b, c, x)
+                return (nb, compute), (reads, wall, energy, hidden)
+
+            (nb, credit_out), ys = jax.lax.scan(body, (banks, credit), xs)
+            return nb, credit_out, ys
+
+        argnums = ((0, 1) if donate and jax.default_backend() != "cpu"
+                   else ())
+        # the cache entry holds the plan too, pinning id(plan) to this plan
+        hit = (jax.jit(pipe, donate_argnums=argnums), plan)
+        if len(_pipeline_cache) >= _PIPELINE_CACHE_MAX:
+            _pipeline_cache.pop(next(iter(_pipeline_cache)))
+    _pipeline_cache[key] = hit
+    return hit[0]
+
+
+def schedule_pipeline(device: DeviceState, steps, *,
+                      n_steps: int | None = None,
+                      use_kernels: bool | None = None,
+                      interpret: bool | None = None,
+                      refresh: bool = False,
+                      async_host: bool = False,
+                      donate: bool = False) -> PipelineResult:
+    """Run K recurring schedule steps as ONE ``jax.lax.scan`` dispatch.
+
+    ``steps`` is either a sequence of K per-step program layouts (anything
+    ``schedule`` accepts — all steps must lower to the SAME layout:
+    identical command streams per slot and copy pattern; HOSTW payload
+    *data* may differ per step), or — with ``n_steps=K`` — a single layout
+    replayed K times. Equivalent to calling ``schedule`` K times in a
+    Python loop (bit-exact states, reads, and meters; the async host
+    credit chains identically), but the steady-state per-step cost is one
+    scan iteration instead of a full host round-trip.
+
+    ``donate=True`` donates the input device's buffers to the scan on
+    accelerator backends — fastest for long-lived pipelines, but the
+    passed-in ``device`` is CONSUMED (using it afterwards raises a
+    donated-buffer error); leave the default to keep ``schedule``'s
+    input-preserving contract.
+    """
+    cfg = device.config
+    if n_steps is not None:
+        step_list = [steps] * int(n_steps)
+    else:
+        step_list = list(steps)
+    if not step_list:
+        raise ValueError("schedule_pipeline needs at least one step")
+
+    # Lower step 0 fully; later steps only need an O(slots) digest check —
+    # identical command streams imply identical copy stripping and
+    # grouping, and stripping preserves HOSTW payloads, so the original
+    # (pre-strip) programs serve for per-step payload extraction.
+    flat0, stripped0, groups0, deferred0 = _lower_step(cfg, step_list[0])
+    flats = [flat0]
+    for k, programs in enumerate(step_list[1:], 1):
+        if programs is step_list[0]:
+            flats.append(flat0)         # replicated layout: nothing to check
+            continue
+        flat_k = _normalize_programs(cfg, programs)
+        for s in range(cfg.n_slots):
+            a, b = flat0[s], flat_k[s]
+            if ((a is None) != (b is None)
+                    or (a is not None and stream_key(a) != stream_key(b))):
+                raise ValueError(
+                    f"pipeline step {k} does not recur: slot "
+                    f"{cfg.slot_coords(s)}'s command stream differs from "
+                    "step 0 — schedule_pipeline runs ONE recurring step; "
+                    "use schedule() for heterogeneous step sequences")
+        flats.append(flat_k)
+
+    plan = _plan_for(cfg, stripped0, groups0, deferred0,
+                     use_kernels=use_kernels, interpret=interpret,
+                     refresh=refresh, async_host=async_host)
+    xs = tuple(
+        _stack_step_payloads(
+            [_payload_stack([flats[k][s] for s in slots], cfg.words)
+             for k in range(len(step_list))])
+        for slots in plan.group_slots)
+    credit = device.host_credit_ns
+    if not isinstance(credit, jax.Array):
+        credit = jnp.float32(credit)
+    fn = _pipeline_fn(plan, len(step_list), donate)
+    new_banks, credit_out, (reads, walls, energies, hidden) = fn(
+        device.banks, credit, xs)
+    SCHED_STATS["dispatches"] += 1
+    stats = plan.copy.stats if plan.copy is not None else CopyDrainStats()
+    return PipelineResult(
+        state=device.with_banks(new_banks, host_credit_ns=credit_out),
+        wall_ns=walls,
+        energy_nj=energies,
+        n_steps=len(step_list),
+        bus_ns=plan.bus_total,
+        host_bytes=plan.host_bytes,
+        copy_ns=stats.makespan_ns,
+        copy_total_ns=stats.total_ns,
+        copy_queue_ns=stats.queue_ns,
+        rank_switch_ns=plan.switch_ns,
+        link_busy_ns=dict(stats.link_busy_ns),
+        _group_reads=reads,
+        _read_layout=(cfg.n_slots, plan.group_slots),
+        _host_overlap_ns=hidden if async_host else 0.0)
 
 
 # ---------------------------------------------------------------------------

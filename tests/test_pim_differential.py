@@ -12,6 +12,12 @@ field (the compiled fold replays the eager path's IEEE additions, so in
 practice the meters are equal to the last ulp too). This is the safety net
 that keeps IR → compile → exec → device → schedule refactors honest.
 
+Every program additionally checks the vectorized columnar cost tables
+against the per-op reference loop (identical float32 bit patterns), and a
+pipeline leg runs K recurring steps through ``schedule_pipeline``'s single
+``lax.scan`` dispatch against K per-step ``schedule`` calls (bit-exact
+states/reads/meters, identical chained async credit).
+
 The scheduled leg also runs on a 2-channel device (channel layout must not
 touch per-slot state), a refresh strategy covers ``refresh=True`` end to
 end, and a multi-step invariant suite checks the channel-aware wall clock:
@@ -27,7 +33,7 @@ import numpy as np
 import pytest
 
 try:
-    from hypothesis import given, strategies as st
+    from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True
 except ImportError:  # offline fallback: deterministic seed sweep below
     HAVE_HYPOTHESIS = False
@@ -91,6 +97,14 @@ def _fresh():
 
 
 def _assert_agree(prog, refresh=False):
+    # columnar cost pass leg: the vectorized template gather must equal the
+    # per-op reference loop row-for-row (same float32 bit patterns)
+    f_vec, i_vec = pim.cost_tables(prog)
+    f_ref, i_ref = pim.cost_tables_reference(prog)
+    assert f_vec.shape == f_ref.shape
+    assert np.array_equal(f_vec.view(np.uint32), f_ref.view(np.uint32))
+    assert np.array_equal(i_vec, i_ref)
+
     s_e, reads_e = pim.run_program(_fresh(), prog)
     if refresh:
         s_e = pim.SubarrayState(
@@ -188,6 +202,60 @@ def _assert_channel_and_async_invariants(seed: int, n_steps: int,
         assert a <= s + 1e-3, (seed, k)
 
 
+def _assert_pipeline_agrees(seed: int, n_steps: int, async_host=False):
+    """schedule_pipeline leg: K recurring steps under one lax.scan must be
+    bit-exact against K per-step schedule() calls — states, reads, meters,
+    and the chained async credit."""
+    rng = np.random.default_rng(seed)
+    cfg = pim.DeviceConfig(channels=2, ranks=1, banks_per_rank=2,
+                           num_rows=ROWS, words=WORDS)
+    layout = [_build_program(rng, int(rng.integers(1, 12)))
+              if rng.random() < 0.75 else None for _ in range(4)]
+    if all(p is None for p in layout):
+        layout[0] = _build_program(rng, 4)
+    steps = []
+    for _ in range(n_steps):        # same streams, fresh payload data
+        steps.append([
+            p.with_payloads(
+                rng.integers(0, 2**32, (len(p.payloads), WORDS),
+                             dtype=np.uint32))
+            if p is not None else None for p in layout])
+
+    dev = pim.make_device(cfg)
+    walls, energies, reads = [], [], []
+    for s in steps:
+        r = pim.schedule(dev, s, async_host=async_host)
+        dev = r.state
+        walls.append(float(r.wall_ns))
+        energies.append(float(r.energy_nj))
+        reads.append(r.reads)
+
+    pr = pim.schedule_pipeline(pim.make_device(cfg), steps,
+                               async_host=async_host)
+    assert pr.n_steps == n_steps
+    assert np.array_equal(np.asarray(dev.banks.bits),
+                          np.asarray(pr.state.banks.bits))
+    for f in INT_FIELDS:
+        assert np.array_equal(np.asarray(getattr(dev.banks.meter, f)),
+                              np.asarray(getattr(pr.state.banks.meter, f))), f
+    for f in FLOAT_FIELDS:
+        np.testing.assert_allclose(
+            np.asarray(getattr(pr.state.banks.meter, f)),
+            np.asarray(getattr(dev.banks.meter, f)), rtol=1e-6,
+            err_msg=f"pipeline meter.{f}")
+    np.testing.assert_allclose(walls, np.asarray(pr.wall_ns), rtol=1e-6)
+    np.testing.assert_allclose(energies, np.asarray(pr.energy_nj),
+                               rtol=1e-6)
+    preads = pr.reads
+    for k in range(n_steps):
+        for slot in range(4):
+            assert len(reads[k][slot]) == len(preads[k][slot])
+            for x, y in zip(reads[k][slot], preads[k][slot]):
+                assert np.array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_allclose(float(dev.host_credit_ns),
+                               float(pr.state.host_credit_ns), rtol=1e-6)
+
+
 if HAVE_HYPOTHESIS:
     @given(seed=st.integers(0, 2**32 - 1), n_ops=st.integers(1, 24))
     def test_differential_eager_compiled_scheduled(seed, n_ops):
@@ -202,6 +270,14 @@ if HAVE_HYPOTHESIS:
     @given(seed=st.integers(0, 2**32 - 1), n_steps=st.integers(1, 3))
     def test_differential_channel_async_invariants(seed, n_steps):
         _assert_channel_and_async_invariants(seed, n_steps)
+
+    # capped: every example compiles two fresh XLA programs (step plan +
+    # pipeline scan) for brand-new random streams — 200 would dominate CI
+    @settings(max_examples=40)
+    @given(seed=st.integers(0, 2**32 - 1), n_steps=st.integers(1, 3),
+           async_host=st.booleans())
+    def test_differential_pipeline_vs_per_step(seed, n_steps, async_host):
+        _assert_pipeline_agrees(seed, n_steps, async_host)
 else:
     @pytest.mark.parametrize("seed", range(25))
     def test_differential_eager_compiled_scheduled(seed):
@@ -217,6 +293,11 @@ else:
     @pytest.mark.parametrize("seed", range(8))
     def test_differential_channel_async_invariants(seed):
         _assert_channel_and_async_invariants(seed, 1 + seed % 3)
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_differential_pipeline_vs_per_step(seed):
+        _assert_pipeline_agrees(seed, 1 + seed % 3,
+                                async_host=bool(seed % 2))
 
 
 @pytest.mark.parametrize("seed", range(3))
