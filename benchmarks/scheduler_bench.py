@@ -145,10 +145,185 @@ def bench_pipeline(report=print, reps=3):
     }
 
 
+MP_BANKS = 8            # multi-phase RS workload geometry
+MP_CW_PER_BANK = 8
+MP_WORDS = 16
+MP_ROWS = 64
+MP_REPS = 5
+
+
+def _rs_workload(rng):
+    """The 3-phase RS(12,8) workload: encode (XOR-fold every codeword into
+    per-bank accumulator rows — the fold of valid codewords is itself a
+    valid codeword), reduce (log2(banks) gather+merge tree down to bank 0),
+    readback. Expressed as one heterogeneous phase list for
+    ``schedule_workload``; one codeword is corrupted so the folded
+    syndromes are non-zero and detection is observable end-to-end."""
+    from repro.core.bitplane import rs
+    from repro.core.pim import isa
+    n, npar = 12, 4
+    lanes = MP_WORDS * 32 // 8
+    acc, recv, stage = list(range(n)), list(range(n, 2 * n)), 2 * n
+    cw = np.zeros((MP_BANKS, MP_CW_PER_BANK, n, lanes), np.uint64)
+    for b in range(MP_BANKS):
+        for k in range(MP_CW_PER_BANK):
+            msg = rng.integers(0, 256, size=(8, lanes))
+            par = rs.ref_rs_encode(msg, npar)
+            cw[b, k] = np.concatenate(
+                [msg.astype(np.uint64), par[::-1]], axis=0)
+    cw[1, 2, 5, 3] ^= 0x5A          # one corrupted byte lane
+
+    from repro.core.bitplane import layout as bl
+
+    def pack(row):
+        return bl.pack_elements(row, 8, MP_WORDS)
+
+    cfg = pim.paper_device(MP_BANKS, num_rows=MP_ROWS, words=MP_WORDS)
+    bi = pim.ProgramBuilder(MP_ROWS, MP_WORDS)
+    for r in acc:
+        bi.rowclone(isa.C0, r)
+    phases = [pim.Phase.repeat([bi.build()] * MP_BANKS, 1)]
+    for j in range(n):                      # encode: fold codeword byte j
+        b = pim.ProgramBuilder(MP_ROWS, MP_WORDS)
+        b.issue()
+        b.write_row(stage, np.zeros(MP_WORDS, np.uint32))
+        b.ambit_xor(acc[j], stage, acc[j])
+        enc = b.build()
+        phases.append(pim.Phase(steps=tuple(
+            [enc.with_payloads([pack(cw[bk, k, j])])
+             for bk in range(MP_BANKS)]
+            for k in range(MP_CW_PER_BANK))))
+    bm = pim.ProgramBuilder(MP_ROWS, MP_WORDS)
+    for j in range(n):
+        bm.ambit_xor(acc[j], recv[j], acc[j])
+    merge = bm.build()
+    stride = 1
+    while stride < MP_BANKS:                # reduce: gather+merge tree
+        moves = [((b + stride, 0, acc[j]), (b, 0, recv[j]))
+                 for b in range(0, MP_BANKS, 2 * stride) for j in range(n)]
+        phases.append(pim.Phase.repeat(pim.gather_rows(cfg, moves), 1))
+        alive = set(range(0, MP_BANKS, 2 * stride))
+        phases.append(pim.Phase.repeat(
+            [merge if b in alive else None for b in range(MP_BANKS)], 1))
+        stride *= 2
+    br = pim.ProgramBuilder(MP_ROWS, MP_WORDS)
+    for j in range(n):
+        br.read_row(acc[j])
+    phases.append(pim.Phase.repeat(
+        [br.build()] + [None] * (MP_BANKS - 1), 1))
+    return cfg, phases, cw, acc
+
+
+def bench_multi_phase(report=print):
+    """The tentpole bar (ISSUE 6): the whole heterogeneous multi-phase
+    workload as ONE dispatch vs the per-phase dispatch loop — one host
+    dispatch per phase step, the O(phases x steps) baseline
+    ``schedule_workload`` replaces. The ``schedule_pipeline``-per-phase
+    loop (O(phases) dispatches) is reported as an extra datum."""
+    from repro.core.bitplane import layout as bl
+    from repro.core.bitplane import rs
+    rng = np.random.default_rng(0)
+    cfg, phases, cw, acc = _rs_workload(rng)
+    n_steps = sum(len(p.steps) for p in phases)
+    stats = pim_schedule.SCHED_STATS
+
+    t0 = time.perf_counter()
+    res = pim.schedule_workload(pim.make_device(cfg), phases)
+    jax.block_until_ready(res.state.banks.bits)
+    first_call_ms = (time.perf_counter() - t0) * 1e3
+
+    # Correctness: the in-DRAM fold must equal the numpy XOR oracle, and
+    # the folded syndromes must flag the injected corruption.
+    lanes = MP_WORDS * 32 // 8
+    got = np.stack([bl.unpack_elements(
+        np.asarray(res.state.slot(0).bits)[acc][j], 8, lanes)
+        for j in range(len(acc))])
+    oracle = np.bitwise_xor.reduce(
+        cw.reshape(-1, len(acc), lanes).astype(np.uint64), axis=0)
+    bit_exact = np.array_equal(got, oracle)
+    detected = bool(np.any(rs.ref_rs_syndromes(got, 4)))
+
+    # Per-phase dispatch loop reference (also warms every step layout).
+    seq = [s for p in phases for s in p.steps]
+    dev = pim.make_device(cfg)
+    wall = energy = 0.0
+    for s in seq:
+        r = pim.schedule(dev, s)
+        dev, wall, energy = r.state, wall + r.wall_ns, energy + r.energy_nj
+    jax.block_until_ready(dev.banks.bits)
+    meters_exact = (
+        np.array_equal(np.asarray(dev.banks.bits),
+                       np.asarray(res.state.banks.bits))
+        and abs(wall - res.total_wall_ns) <= 1e-6 * wall
+        and abs(energy - res.total_energy_nj) <= 1e-6 * energy)
+
+    # Steady state: thread the device state through repeated submissions.
+    wl = pim.make_device(cfg)
+    wl = pim.schedule_workload(wl, phases).state
+    jax.block_until_ready(wl.banks.bits)
+    d0 = stats["dispatches"]
+    t0 = time.perf_counter()
+    for _ in range(MP_REPS):
+        wl = pim.schedule_workload(wl, phases).state
+    jax.block_until_ready(wl.banks.bits)
+    wl_ms = (time.perf_counter() - t0) / MP_REPS * 1e3
+    wl_disp = (stats["dispatches"] - d0) / MP_REPS / n_steps
+
+    d0 = stats["dispatches"]
+    t0 = time.perf_counter()
+    for _ in range(MP_REPS):
+        for s in seq:
+            dev = pim.schedule(dev, s).state
+    jax.block_until_ready(dev.banks.bits)
+    loop_ms = (time.perf_counter() - t0) / MP_REPS * 1e3
+    loop_disp = (stats["dispatches"] - d0) / MP_REPS / n_steps
+
+    pp = pim.make_device(cfg)
+    for p in phases:
+        pp = pim.schedule_pipeline(pp, list(p.steps)).state
+    jax.block_until_ready(pp.banks.bits)
+    t0 = time.perf_counter()
+    for _ in range(MP_REPS):
+        for p in phases:
+            pp = pim.schedule_pipeline(pp, list(p.steps)).state
+    jax.block_until_ready(pp.banks.bits)
+    pipe_ms = (time.perf_counter() - t0) / MP_REPS * 1e3
+
+    report(f"multi-phase RS(12,8) ({len(phases)} phase segments, "
+           f"{n_steps} steps): first call {first_call_ms:.0f} ms")
+    report(f"  workload (1 dispatch)      : {wl_ms:8.2f} ms  "
+           f"({wl_disp:.4f} dispatches/step)")
+    report(f"  per-phase dispatch loop    : {loop_ms:8.2f} ms  "
+           f"({loop_disp:.2f} dispatches/step, "
+           f"{loop_ms / wl_ms:.1f}x slower)")
+    report(f"  pipeline-per-phase loop    : {pipe_ms:8.2f} ms  "
+           f"({pipe_ms / wl_ms:.1f}x slower)")
+    report(f"  bit-exact={bit_exact} corruption-detected={detected} "
+           f"meters-exact={meters_exact}")
+    return {"multi_phase": {
+        "workload": "rs_12_8_encode_reduce_readback",
+        "banks": MP_BANKS, "words": MP_WORDS,
+        "codewords_per_bank": MP_CW_PER_BANK,
+        "phase_segments": len(phases), "steps": n_steps,
+        "first_call_ms": first_call_ms,
+        "steady_state_workload_ms": wl_ms,
+        "steady_state_per_phase_loop_ms": loop_ms,
+        "steady_state_pipeline_per_phase_ms": pipe_ms,
+        "dispatches_per_step_workload": wl_disp,
+        "dispatches_per_step_loop": loop_disp,
+        "speedup_vs_per_phase_dispatch_loop": loop_ms / wl_ms,
+        "speedup_vs_pipeline_per_phase": pipe_ms / wl_ms,
+        "bit_exact_vs_oracle": bool(bit_exact),
+        "meters_match_per_step_schedule": bool(meters_exact),
+        "corruption_detected": detected,
+    }}
+
+
 def run(report=print, json_path=None):
     out = {"n_shifts": TABLE23_SHIFTS, "pipeline_steps": PIPELINE_STEPS}
     out.update(bench_cost_pass(report))
     out.update(bench_pipeline(report))
+    out.update(bench_multi_phase(report))
     blob = json.dumps(out, indent=2, sort_keys=True)
     if json_path:
         with open(json_path, "w") as f:

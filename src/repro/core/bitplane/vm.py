@@ -36,7 +36,8 @@ from ..pim import isa
 from ..pim import exec as pim_exec
 from ..pim.device import DeviceConfig, make_device
 from ..pim.ir import PimProgram, ProgramBuilder
-from ..pim.schedule import compiled_for, schedule, schedule_pipeline
+from ..pim.schedule import (Phase, compiled_for, schedule, schedule_pipeline,
+                            schedule_workload)
 from ..pim.state import SubarrayState, make_subarray
 from ..pim.timing import DDR3Timing, DEFAULT_TIMING
 from . import layout
@@ -241,6 +242,109 @@ class PimVM:
                     for s in read_slots]
             out.append(vals[0] if single else vals)
         return out
+
+    def run_workload(self, phases) -> list:
+        """Execute a HETEROGENEOUS multi-phase workload as ONE dispatch.
+
+        ``phases`` is a sequence of ``(step, xs)`` pairs: each phase is a
+        ``run_pipeline``-style recurring step function replayed once per
+        element of its ``xs``. The recurring contract applies WITHIN a
+        phase — phases may record arbitrarily different streams from each
+        other (compute, then gather, then readback...). The allocator and
+        mask cache rewind before every recording exactly as in
+        ``run_pipeline``, so registers that must survive a phase boundary
+        (e.g. accumulators a later phase reduces) must be allocated BEFORE
+        the call. Single-bank VMs run all phases under
+        ``exec.make_workload_runner``'s chained scans; lane-sharded VMs
+        ride ``schedule_workload`` on the device (honoring
+        ``async_host``). Returns one ``run_pipeline``-shaped result list
+        per phase.
+        """
+        assert not self.eager, "run_workload needs the recorded-IR path"
+        phase_list = [(step, list(xs)) for step, xs in phases]
+        assert phase_list, "need at least one phase"
+        self._flush()                   # pending ops run before the workload
+        free0, masks0 = list(self._free), dict(self._mask_rows)
+        ph_progs, ph_slots, ph_single = [], [], []
+        for p, (step, xs) in enumerate(phase_list):
+            assert xs, f"workload phase {p} needs at least one step"
+            progs, bank_payloads = [], []
+            read_slots, single = None, False
+            for x in xs:
+                self._free, self._mask_rows = list(free0), dict(masks0)
+                out = step(self, x)
+                regs = (list(out) if isinstance(out, (list, tuple))
+                        else [out])
+                slots = [self._builder.read_row(r) for r in regs]
+                progs.append(self._builder.build())
+                if self.n_banks == 1:
+                    self._builder = ProgramBuilder(self._num_rows,
+                                                   self.words)
+                else:
+                    bank_payloads.append(self._bank_payloads)
+                    self._bank_payloads = []
+                    self._builder = ProgramBuilder(self._num_rows,
+                                                   self.bank_words)
+                if read_slots is None:
+                    read_slots = slots
+                    single = not isinstance(out, (list, tuple))
+            key0 = (progs[0].digest, len(progs[0].payloads))
+            for k, q in enumerate(progs[1:], 1):
+                if (q.digest, len(q.payloads)) != key0:
+                    raise ValueError(
+                        f"workload phase {p} step {k} recorded a different "
+                        "command stream than the phase's step 0; each "
+                        "phase replays ONE recurring step — split "
+                        "shape-divergent steps into separate phases")
+            ph_progs.append((progs, bank_payloads))
+            ph_slots.append(read_slots)
+            ph_single.append(single)
+        self._free, self._mask_rows = list(free0), dict(masks0)
+        if self.n_banks == 1:
+            runner = pim_exec.make_workload_runner(
+                [compiled_for(progs[0], self.cfg) for progs, _ in ph_progs],
+                self.cfg)
+            payload_phases = tuple(
+                jnp.asarray(np.stack(
+                    [np.stack(q.payloads) for q in progs]).astype(np.uint32))
+                if progs[0].payloads
+                else jnp.zeros((len(progs), 0, self.words), jnp.uint32)
+                for progs, _ in ph_progs)
+            self.state, reads_phases = runner(self.state, payload_phases)
+
+            def row(p, k, slot):
+                return reads_phases[p][slot][k]
+        else:
+            wl = []
+            for progs, pays_steps in ph_progs:
+                wl.append(Phase(steps=tuple(
+                    [prog.with_payloads(rows[b] for rows in pays)
+                     for b in range(self.n_banks)]
+                    for prog, pays in zip(progs, pays_steps))))
+            res = schedule_workload(self._device, wl,
+                                    async_host=self.async_host)
+            self._device = res.state
+            self._wall_ns = self._wall_ns + sum(
+                jnp.sum(pr.wall_ns) for pr in res.phases)
+            self._host_overlap_ns = (self._host_overlap_ns + sum(
+                jnp.sum(jnp.asarray(pr.host_overlap_ns_lazy))
+                for pr in res.phases))
+            per_phase = [pr.reads for pr in res.phases]
+
+            def row(p, k, slot):
+                return np.concatenate(
+                    [np.asarray(per_phase[p][k][b][slot])
+                     for b in range(self.n_banks)])
+        out_phases = []
+        for p, (progs, _) in enumerate(ph_progs):
+            outs = []
+            for k in range(len(progs)):
+                vals = [layout.unpack_elements(np.asarray(row(p, k, s)),
+                                               self.width, self.lanes)
+                        for s in ph_slots[p]]
+                outs.append(vals[0] if ph_single[p] else vals)
+            out_phases.append(outs)
+        return out_phases
 
     # -- register management -------------------------------------------------
     def alloc(self) -> int:

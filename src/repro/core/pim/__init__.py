@@ -14,18 +14,21 @@ from .program import (bank_parallel, estimate_cost, run_shift_workload,
                       shift_k, shift_workload_program)
 from .ir import (COPY_SELF, PimOp, PimProgram, ProgramBuilder,
                  decode_payload, from_trace_banks, from_trace_device, record,
-                 rle_encode_payload, to_trace_banks, to_trace_device)
+                 rle_encode_payload, sequence_digest, to_trace_banks,
+                 to_trace_device)
 from .compile import (CompiledProgram, compile_program, cost_pass,
                       cost_summary, cost_tables, cost_tables_reference,
                       dead_copy_elimination, fuse)
-from .exec import ExecResult, execute, make_pipeline_runner, make_runner
+from .exec import (ExecResult, execute, make_pipeline_runner, make_runner,
+                   make_workload_runner)
 from .device import (DeviceConfig, DeviceState, bus_time_ns,
                      channel_bus_model, channel_occupancy, device_wall_ns,
                      host_bus_ns, issue_bus_ns, make_device, paper_device)
-from .schedule import (CopyDrainStats, PipelineResult, ScheduleResult,
+from .schedule import (CopyDrainStats, Phase, PhaseResult, PipelinePlan,
+                       PipelineResult, ScheduleResult, WorkloadResult,
                        compiled_for, gather_rows, schedule,
-                       schedule_pipeline, shard_lanes, shard_rows,
-                       stream_key, xor_reduce_program)
+                       schedule_pipeline, schedule_workload, shard_lanes,
+                       shard_rows, stream_key, xor_reduce_program)
 from .variation import (PAPER_TABLE4, TECH22, Tech22nm, shift_failure_rate)
 from .area import AreaModel, PAPER_TABLE5, mim_capacitor_plate_side_um
 
@@ -41,18 +44,20 @@ __all__ = [
     "bank_parallel", "estimate_cost", "run_shift_workload", "shift_k",
     "shift_workload_program",
     "COPY_SELF", "PimOp", "PimProgram", "ProgramBuilder", "record",
-    "decode_payload", "rle_encode_payload",
+    "decode_payload", "rle_encode_payload", "sequence_digest",
     "from_trace_banks", "from_trace_device", "to_trace_banks",
     "to_trace_device",
     "CompiledProgram", "compile_program", "cost_pass", "cost_summary",
     "cost_tables", "cost_tables_reference", "dead_copy_elimination", "fuse",
     "ExecResult", "execute", "make_pipeline_runner", "make_runner",
+    "make_workload_runner",
     "DeviceConfig", "DeviceState", "bus_time_ns", "channel_bus_model",
     "channel_occupancy", "device_wall_ns", "host_bus_ns", "issue_bus_ns",
     "make_device", "paper_device",
-    "CopyDrainStats", "PipelineResult", "ScheduleResult", "compiled_for",
-    "gather_rows", "schedule", "schedule_pipeline", "shard_lanes",
-    "shard_rows", "stream_key", "xor_reduce_program",
+    "CopyDrainStats", "Phase", "PhaseResult", "PipelinePlan",
+    "PipelineResult", "ScheduleResult", "WorkloadResult", "compiled_for",
+    "gather_rows", "schedule", "schedule_pipeline", "schedule_workload",
+    "shard_lanes", "shard_rows", "stream_key", "xor_reduce_program",
     "PAPER_TABLE4", "TECH22", "Tech22nm", "shift_failure_rate",
     "AreaModel", "PAPER_TABLE5", "mim_capacitor_plate_side_um",
 ]

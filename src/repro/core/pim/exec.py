@@ -357,6 +357,53 @@ def make_pipeline_runner(program, cfg: DDR3Timing = DEFAULT_TIMING, *,
     return run_pipe
 
 
+def make_workload_runner(programs, cfg: DDR3Timing = DEFAULT_TIMING, *,
+                         use_kernels: bool | None = None,
+                         interpret: bool | None = None,
+                         refresh: bool = False):
+    """Build a jitted MULTI-PHASE pipeline ``(state, payload_phases) ->
+    (state, reads_phases)`` for a sequence of recurring programs.
+
+    ``programs`` is one recurring program per phase; ``payload_phases``
+    is a matching tuple of ``(K_p, n_payloads_p, words)`` uint32 arrays —
+    each phase's per-step HOSTW data. The phases run back-to-back as
+    chained ``lax.scan``s (one per phase) inside ONE jit, so a whole
+    heterogeneous single-subarray workload (e.g. ``PimVM.run_workload``
+    on an unsharded VM) costs one XLA dispatch total. ``reads_phases``
+    is a tuple of per-phase read pytrees, each with a leading step axis.
+    Cached on the first program's compile artifact, keyed by the phase
+    digest sequence."""
+    compiled = [_as_compiled(p, cfg) for p in programs]
+    if not compiled:
+        raise ValueError("make_workload_runner needs at least one program")
+    if use_kernels is None:
+        use_kernels = _default_use_kernels()
+    bases = tuple(
+        make_runner(c, cfg, use_kernels=use_kernels, interpret=interpret,
+                    refresh=refresh, payload_arg=True)
+        for c in compiled)
+    cache = compiled[0]._runner_cache   # make_runner just ensured it exists
+    key = ("workload", tuple(c.program.digest for c in compiled),
+           use_kernels, interpret, refresh, cfg)
+    if key in cache:
+        return cache[key]
+
+    @jax.jit
+    def run_workload(state: SubarrayState, payload_phases):
+        reads_phases = []
+        for base, payload_steps in zip(bases, payload_phases):
+            def body(s, p, base=base):
+                out, reads = base.traced(s, p)
+                return out, reads
+
+            state, reads = jax.lax.scan(body, state, payload_steps)
+            reads_phases.append(reads)
+        return state, tuple(reads_phases)
+
+    cache[key] = run_workload
+    return run_workload
+
+
 def execute(program, state: SubarrayState | None = None,
             cfg: DDR3Timing = DEFAULT_TIMING, *,
             use_kernels: bool | None = None,

@@ -712,22 +712,53 @@ def record(fn, num_rows: int = NUM_ROWS, words: int = ROW_WORDS) -> PimProgram:
     return b.build()
 
 
+def sequence_digest(digests: Iterable[bytes]) -> bytes:
+    """Stable 128-bit digest of an ORDERED digest sequence — the O(1)
+    identity of a concatenated or multi-phase stream, folded from the
+    parts' cached 128-bit digests instead of re-hashing any op table."""
+    h = hashlib.blake2b(digest_size=16)
+    for d in digests:
+        h.update(d)
+    return h.digest()
+
+
 def concat(programs: Iterable[PimProgram]) -> PimProgram:
-    """Concatenate same-shape programs into one stream."""
+    """Concatenate same-shape programs into one stream.
+
+    Columnar fast path: the output's op table is stitched from the
+    children's CACHED column tables (only WRITE payload indices are
+    rebased), so concatenating warm programs never re-walks ops through
+    ``_build_columns`` — ``ir.COLUMN_STATS`` stays flat on recurring
+    multi-phase plans that fuse compute+gather streams every call."""
     programs = list(programs)
     assert programs, "need at least one program"
+    if len(programs) == 1:
+        return programs[0]
     rows, words = programs[0].num_rows, programs[0].words
     ops: list[PimOp] = []
     payloads: list[np.ndarray] = []
+    tables: list[np.ndarray] = []
+    write_code = OP_CODE[OP_WRITE]
     for p in programs:
         assert (p.num_rows, p.words) == (rows, words), "shape mismatch"
         off = len(payloads)
-        for o in p.ops:
-            if o.op == OP_WRITE:
-                o = dataclasses.replace(o, payload=o.payload + off)
-            ops.append(o)
+        table = p.columns.table
+        if off and len(p.payloads):
+            table = table.copy()
+            table[table[:, 0] == write_code, 5] += off
+            for o in p.ops:
+                if o.op == OP_WRITE:
+                    o = dataclasses.replace(o, payload=o.payload + off)
+                ops.append(o)
+        else:
+            ops.extend(p.ops)
+        tables.append(table)
         payloads.extend(p.payloads)
+    table = np.concatenate(tables, axis=0)
+    table.setflags(write=False)
+    digest = hashlib.blake2b(table.tobytes(), digest_size=16).digest()
     out = PimProgram(ops=tuple(ops), num_rows=rows, words=words,
                      payloads=tuple(payloads))
-    out.columns                 # warm the columnar encoding + digest once
+    object.__setattr__(out, "_columns",
+                       ProgramColumns(table=table, digest=digest))
     return out

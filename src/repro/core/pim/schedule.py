@@ -67,6 +67,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 from typing import Callable, Sequence
 
 import jax
@@ -442,10 +443,22 @@ class _StepPlan:
     switch_ns: float
     host_bytes: int
     copy: "_CopyDrainPlan | None"
+    group_n_reads: tuple = ()   # per group: HOSTR count of the rep stream
+    group_n_payloads: tuple = ()  # per group: HOSTW payload count
 
 
 _plan_cache: dict = {}
 _PLAN_CACHE_MAX = 256
+
+
+def _plan_key(cfg: DeviceConfig, groups, deferred, *,
+              use_kernels, interpret, refresh, async_host):
+    """The step-plan cache key: everything trace-relevant about one
+    schedule layout (streams via digests, grouping, copy pattern, flags).
+    Shared by ``_plan_for`` and the multi-phase workload signature."""
+    return (cfg, use_kernels, interpret, refresh, async_host,
+            tuple((key, tuple(slots)) for key, slots in groups.items()),
+            tuple((s, d, op.a, op.b) for s, d, op in deferred))
 
 
 def _make_step_fn(cfg: DeviceConfig, runners, group_slots, bus_j,
@@ -520,7 +533,12 @@ def _make_step_fn(cfg: DeviceConfig, runners, group_slots, bus_j,
         busy = busy0_c - hidden
         wall = jnp.max(busy) + compute_ns
         energy = jnp.sum(e1 - e0)
-        return (new_banks, tuple(reads), wall, energy, compute_ns, busy,
+        # The outgoing double-buffer credit: only an ASYNC step prefetches
+        # the next step's transfers under its compute window. A sync step
+        # resets the leaf to zero — its host engine ran synchronously, so
+        # there is nothing buffered for a later async step to hide behind.
+        credit_out = compute_ns if async_host else jnp.float32(0.0)
+        return (new_banks, tuple(reads), wall, energy, credit_out, busy,
                 jnp.sum(hidden))
 
     return jax.jit(step), step
@@ -529,9 +547,9 @@ def _make_step_fn(cfg: DeviceConfig, runners, group_slots, bus_j,
 def _plan_for(cfg: DeviceConfig, stripped, groups, deferred, *,
               use_kernels, interpret, refresh, async_host) -> _StepPlan:
     """Resolve (and cache) the step plan of one schedule layout."""
-    plan_key = (cfg, use_kernels, interpret, refresh, async_host,
-                tuple((key, tuple(slots)) for key, slots in groups.items()),
-                tuple((s, d, op.a, op.b) for s, d, op in deferred))
+    plan_key = _plan_key(cfg, groups, deferred, use_kernels=use_kernels,
+                         interpret=interpret, refresh=refresh,
+                         async_host=async_host)
     plan = _plan_cache.pop(plan_key, None)
     if plan is not None:
         _plan_cache[plan_key] = plan    # (re)insert at the MRU end
@@ -539,6 +557,7 @@ def _plan_for(cfg: DeviceConfig, stripped, groups, deferred, *,
     SCHED_STATS["plan_misses"] += 1
 
     runners, group_slots = [], []
+    group_n_reads, group_n_pay = [], []
     issue_bus = np.zeros(cfg.n_slots, np.float32)
     host_bus = np.zeros(cfg.n_slots, np.float32)
     for key, slot_ids in groups.items():
@@ -548,6 +567,8 @@ def _plan_for(cfg: DeviceConfig, stripped, groups, deferred, *,
             compiled, cfg.timing, use_kernels=use_kernels,
             interpret=interpret, refresh=refresh, payload_arg=True))
         group_slots.append(tuple(slot_ids))
+        group_n_reads.append(rep.n_reads)
+        group_n_pay.append(len(rep.payloads))
         g_issue = issue_bus_ns(rep, cfg.timing)
         g_host = host_bus_ns(rep, cfg.timing)
         for k in slot_ids:
@@ -589,7 +610,9 @@ def _plan_for(cfg: DeviceConfig, stripped, groups, deferred, *,
         chan_busy=tuple(float(x) for x in chan_busy0),
         switch_ns=switch_ns,
         host_bytes=host_bytes,
-        copy=copy_plan)
+        copy=copy_plan,
+        group_n_reads=tuple(group_n_reads),
+        group_n_payloads=tuple(group_n_pay))
     if len(_plan_cache) >= _PLAN_CACHE_MAX:
         _plan_cache.pop(next(iter(_plan_cache)))
     _plan_cache[plan_key] = plan
@@ -622,6 +645,31 @@ def _lower_step(cfg: DeviceConfig, programs):
         if p is not None and len(p.ops):
             groups.setdefault(stream_key(p), []).append(k)
     return flat, stripped, groups, deferred
+
+
+def _lower_recurring(cfg: DeviceConfig, step_list, *, what: str, hint: str):
+    """Lower a K-step RECURRING layout: step 0 fully, later steps only an
+    O(slots) digest check — identical command streams imply identical copy
+    stripping and grouping, and stripping preserves HOSTW payloads, so the
+    original (pre-strip) programs serve for per-step payload extraction.
+    Returns ``(flats, stripped0, groups0, deferred0)``."""
+    flat0, stripped0, groups0, deferred0 = _lower_step(cfg, step_list[0])
+    flats = [flat0]
+    for k, programs in enumerate(step_list[1:], 1):
+        if programs is step_list[0]:
+            flats.append(flat0)         # replicated layout: nothing to check
+            continue
+        flat_k = _normalize_programs(cfg, programs)
+        for s in range(cfg.n_slots):
+            a, b = flat0[s], flat_k[s]
+            if ((a is None) != (b is None)
+                    or (a is not None and stream_key(a) != stream_key(b))):
+                raise ValueError(
+                    f"{what} step {k} does not recur: slot "
+                    f"{cfg.slot_coords(s)}'s command stream differs from "
+                    f"step 0 — {hint}")
+        flats.append(flat_k)
+    return flats, stripped0, groups0, deferred0
 
 
 def schedule(device: DeviceState,
@@ -667,12 +715,12 @@ def schedule(device: DeviceState,
     credit = device.host_credit_ns
     if not isinstance(credit, jax.Array):
         credit = jnp.float32(credit)
-    new_banks, greads, wall, energy, compute_ns, busy, hidden_sum = plan.fn(
+    new_banks, greads, wall, energy, credit_out, busy, hidden_sum = plan.fn(
         device.banks, credit, payloads)
     SCHED_STATS["dispatches"] += 1
     stats = plan.copy.stats if plan.copy is not None else CopyDrainStats()
     return ScheduleResult(
-        state=device.with_banks(new_banks, host_credit_ns=compute_ns),
+        state=device.with_banks(new_banks, host_credit_ns=credit_out),
         wall_ns=wall,
         bus_ns=plan.bus_total,
         energy_nj=energy,
@@ -751,7 +799,15 @@ def _stack_step_payloads(pay_list):
     stacked device array via the payload cache instead of re-uploading K
     copies of identical host data per call."""
     if any(p is not pay_list[0] for p in pay_list):
-        return jnp.stack(pay_list)
+        key = ("multi",) + tuple(id(p) for p in pay_list)
+        hit = _payload_cache.pop(key, None)
+        if hit is None:
+            if len(_payload_cache) >= _PAYLOAD_CACHE_MAX:
+                _payload_cache.pop(next(iter(_payload_cache)))
+            # the cache entry holds the batches, pinning their ids
+            hit = (jnp.stack(pay_list), tuple(pay_list))
+        _payload_cache[key] = hit
+        return hit[0]
     key = ("steps", len(pay_list), id(pay_list[0]))
     hit = _payload_cache.pop(key, None)
     if hit is None:
@@ -778,11 +834,14 @@ def _pipeline_fn(plan: _StepPlan, n_steps: int, donate: bool):
         def pipe(banks, credit, xs):
             def body(carry, x):
                 b, c = carry
-                nb, reads, wall, energy, compute, _busy, hidden = \
+                nb, reads, wall, energy, credit_out, _busy, hidden = \
                     plan.raw_fn(b, c, x)
-                return (nb, compute), (reads, wall, energy, hidden)
+                return (nb, credit_out), (reads, wall, energy, hidden)
 
-            (nb, credit_out), ys = jax.lax.scan(body, (banks, credit), xs)
+            # explicit length: a copy-only step layout has no stream
+            # groups, so its xs pytree carries no leaves to infer K from
+            (nb, credit_out), ys = jax.lax.scan(body, (banks, credit), xs,
+                                                length=n_steps)
             return nb, credit_out, ys
 
         argnums = ((0, 1) if donate and jax.default_backend() != "cpu"
@@ -827,27 +886,11 @@ def schedule_pipeline(device: DeviceState, steps, *,
     if not step_list:
         raise ValueError("schedule_pipeline needs at least one step")
 
-    # Lower step 0 fully; later steps only need an O(slots) digest check —
-    # identical command streams imply identical copy stripping and
-    # grouping, and stripping preserves HOSTW payloads, so the original
-    # (pre-strip) programs serve for per-step payload extraction.
-    flat0, stripped0, groups0, deferred0 = _lower_step(cfg, step_list[0])
-    flats = [flat0]
-    for k, programs in enumerate(step_list[1:], 1):
-        if programs is step_list[0]:
-            flats.append(flat0)         # replicated layout: nothing to check
-            continue
-        flat_k = _normalize_programs(cfg, programs)
-        for s in range(cfg.n_slots):
-            a, b = flat0[s], flat_k[s]
-            if ((a is None) != (b is None)
-                    or (a is not None and stream_key(a) != stream_key(b))):
-                raise ValueError(
-                    f"pipeline step {k} does not recur: slot "
-                    f"{cfg.slot_coords(s)}'s command stream differs from "
-                    "step 0 — schedule_pipeline runs ONE recurring step; "
-                    "use schedule() for heterogeneous step sequences")
-        flats.append(flat_k)
+    flats, stripped0, groups0, deferred0 = _lower_recurring(
+        cfg, step_list, what="pipeline",
+        hint="schedule_pipeline runs ONE recurring step; use "
+             "schedule_workload() for multi-phase sequences or schedule() "
+             "for fully heterogeneous ones")
 
     plan = _plan_for(cfg, stripped0, groups0, deferred0,
                      use_kernels=use_kernels, interpret=interpret,
@@ -880,6 +923,495 @@ def schedule_pipeline(device: DeviceState, steps, *,
         _group_reads=reads,
         _read_layout=(cfg.n_slots, plan.group_slots),
         _host_overlap_ns=hidden if async_host else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Multi-phase workloads: heterogeneous phase sequences under ONE dispatch
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Phase:
+    """One phase of a multi-phase workload: a RECURRING step layout (the
+    ``schedule_pipeline`` contract) replayed once per entry of ``steps``.
+    Payload data may differ per step; the command streams may not.
+
+    ``async_host=None`` inherits the workload-level flag; an explicit
+    ``True``/``False`` overrides it per phase (e.g. an async HOSTW load
+    phase feeding a sync compute phase)."""
+
+    steps: tuple
+    async_host: bool | None = None
+
+    @classmethod
+    def repeat(cls, layout, n_steps: int, **kw) -> "Phase":
+        """A phase that replays ONE layout ``n_steps`` times (payloads
+        included — use explicit ``steps`` for per-step data)."""
+        return cls(steps=(layout,) * int(n_steps), **kw)
+
+
+def _as_phase(d) -> Phase:
+    """Phase descriptors: a :class:`Phase`, a ``(layout, n_steps)`` pair,
+    or a sequence of per-step layouts."""
+    if isinstance(d, Phase):
+        return d
+    if (isinstance(d, tuple) and len(d) == 2
+            and isinstance(d[1], (int, np.integer))):
+        return Phase.repeat(d[0], int(d[1]))
+    return Phase(steps=tuple(d))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PipelinePlan:
+    """A fully-lowered multi-phase workload: one cached :class:`_StepPlan`
+    per phase plus the sequence signature the plan cache is keyed on.
+    Identity-stable across warm ``schedule_workload`` calls, so the jitted
+    segmented/switch drivers (keyed on ``id(plan)``) stay warm too."""
+
+    phases: tuple               # per-phase _StepPlan
+    n_steps: tuple              # per-phase step count
+    async_host: tuple           # per-phase resolved async-host flag
+    signature: bytes            # 128-bit digest of the phase sequence
+
+
+@dataclasses.dataclass
+class PhaseResult:
+    """One phase's slice of a :class:`WorkloadResult` — the
+    :class:`PipelineResult` metrics minus the device state (state is only
+    meaningful at the end of the whole workload) plus the async credit
+    observed at the phase boundary."""
+
+    wall_ns: jax.Array          # (K,) per-step wall clock
+    energy_nj: jax.Array        # (K,) per-step energy
+    n_steps: int
+    bus_ns: float               # per-step bus occupancy (Σ slots)
+    host_bytes: int             # per-step off-chip bytes
+    copy_ns: float = 0.0
+    copy_total_ns: float = 0.0
+    copy_queue_ns: float = 0.0
+    rank_switch_ns: float = 0.0
+    link_busy_ns: dict = dataclasses.field(default_factory=dict)
+    _boundary_credit_ns: object = 0.0   # credit leaving the phase's last step
+    _group_reads: tuple = ()
+    _read_layout: tuple = (0, ())
+    _host_overlap_ns: object = 0.0      # (K,) in async mode, else 0.0
+
+    @property
+    def reads(self) -> list:
+        """Per-step reads: ``reads[k][slot]``, as in
+        :attr:`PipelineResult.reads` (lazy, memoized)."""
+        cached = getattr(self, "_reads_cache", None)
+        if cached is None:
+            cached = _unbatch_reads(self._group_reads, self._read_layout,
+                                    self.n_steps)
+            self._reads_cache = cached
+        return cached
+
+    @property
+    def boundary_credit_ns(self) -> float:
+        """The ``host_credit_ns`` leaf as it left this phase's last step:
+        the next phase's first step overlaps (at most) this much host
+        traffic. Zero after a sync phase — see the credit-reset contract.
+        Stored as a lazy ``(per-boundary array, phase index)`` pair so a
+        warm ``schedule_workload`` call issues no per-phase host
+        dispatches; the slice happens here, on first read."""
+        b = self._boundary_credit_ns
+        if isinstance(b, tuple):
+            arr, i = b
+            return float(arr[i])
+        return float(b)
+
+    @property
+    def host_overlap_ns_lazy(self):
+        """Raw per-step hidden-host-time values (see
+        ``ScheduleResult.host_overlap_ns_lazy``)."""
+        return self._host_overlap_ns
+
+    @property
+    def total_wall_ns(self) -> float:
+        return float(jnp.sum(self.wall_ns))
+
+    @property
+    def host_overlap_ns(self) -> float:
+        return float(jnp.sum(jnp.asarray(self._host_overlap_ns)))
+
+
+@dataclasses.dataclass
+class WorkloadResult:
+    """Outcome of ``schedule_workload``: the final device state plus one
+    :class:`PhaseResult` per phase. ``order`` echoes the switch-mode step
+    order (``None`` for the segmented lowering)."""
+
+    state: DeviceState
+    phases: tuple
+    order: tuple | None = None
+
+    @property
+    def n_steps(self) -> int:
+        return sum(p.n_steps for p in self.phases)
+
+    @property
+    def total_wall_ns(self) -> float:
+        return sum(p.total_wall_ns for p in self.phases)
+
+    @property
+    def total_energy_nj(self) -> float:
+        return float(sum(float(jnp.sum(p.energy_nj)) for p in self.phases))
+
+    @property
+    def host_overlap_ns(self) -> float:
+        return sum(p.host_overlap_ns for p in self.phases)
+
+
+_workload_plan_cache: dict = {}
+_WORKLOAD_PLAN_CACHE_MAX = 64
+
+_workload_fn_cache: dict = {}
+_WORKLOAD_FN_CACHE_MAX = 64
+
+# Per-phase lowering memo: a warm re-dispatch of a workload whose phase
+# objects are unchanged (the steady-state shape — fresh payloads arrive as
+# NEW with_payloads programs and therefore miss) skips the O(steps x
+# slots) recurrence re-check and the plan-key tuple rebuild entirely.
+_phase_lower_cache: dict = {}
+_PHASE_LOWER_CACHE_MAX = 256
+
+# Whole-workload identity memo: re-submitting the SAME Phase objects (the
+# steady-state loop shape — state threads through, descriptors don't
+# change) skips even the O(phases x steps) id walks and goes straight to
+# the cached driver + xs. Entries pin the steps tuples they key on, so a
+# recycled id can never alias a dead layout.
+_workload_fast_cache: dict = {}
+_WORKLOAD_FAST_CACHE_MAX = 32
+
+
+def _layout_ids(step):
+    """Identity fingerprint of one step layout (programs by id, nesting
+    preserved). Mutating a layout in place swaps the contained program
+    ids, so the fingerprint-keyed cache can never serve stale lowerings.
+    Returns None for containers it does not recognize (uncacheable)."""
+    if step is None or isinstance(step, PimProgram):
+        return id(step)
+    if isinstance(step, (list, tuple)):
+        parts = tuple(_layout_ids(x) for x in step)
+        return None if any(p is None for p in parts) else parts
+    return None
+
+
+def _workload_fn(wplan: PipelinePlan, donate: bool):
+    """The segmented-scan driver: one ``lax.scan`` per phase, chained
+    under ONE jit with the banks pytree and the async credit threaded
+    through — a whole multi-phase workload is one XLA dispatch."""
+    key = ("seg", id(wplan), donate)
+    hit = _workload_fn_cache.pop(key, None)
+    if hit is None:
+        plans = wplan.phases
+
+        def drive(banks, credit, xs_phases):
+            outs, boundary = [], []
+            b, c = banks, credit
+            for plan, n, xs in zip(plans, wplan.n_steps, xs_phases):
+                def body(carry, x, plan=plan):
+                    bb, cc = carry
+                    nb, reads, wall, energy, credit_out, _busy, hidden = \
+                        plan.raw_fn(bb, cc, x)
+                    return (nb, credit_out), (reads, wall, energy, hidden)
+
+                # explicit length: a copy-only phase has no stream groups,
+                # so its xs pytree carries no leaves to infer K from
+                (b, c), ys = jax.lax.scan(body, (b, c), xs, length=n)
+                outs.append(ys)
+                boundary.append(c)
+            return b, c, tuple(outs), jnp.stack(boundary)
+
+        argnums = ((0, 1) if donate and jax.default_backend() != "cpu"
+                   else ())
+        # the cache entry holds the wplan too, pinning id(wplan)
+        hit = (jax.jit(drive, donate_argnums=argnums), wplan)
+        if len(_workload_fn_cache) >= _WORKLOAD_FN_CACHE_MAX:
+            _workload_fn_cache.pop(next(iter(_workload_fn_cache)))
+    _workload_fn_cache[key] = hit
+    return hit[0]
+
+
+def _switch_fn(wplan: PipelinePlan, words: int, donate: bool):
+    """The plan-switching driver: one ``lax.scan`` over a phase-index
+    sequence, ``lax.switch``-ing across the per-phase step fns. Branches
+    must return identical pytrees, so each branch flattens its reads to a
+    zero-padded ``(R_max, words)`` block and slices its payloads out of a
+    common ``(G_max, S_max, P_max, words)`` xs leaf; the per-phase views
+    are recovered statically by the caller."""
+    key = ("switch", id(wplan), donate)
+    hit = _workload_fn_cache.pop(key, None)
+    if hit is None:
+        plans = wplan.phases
+        r_tot = [sum(nr * len(slots) for nr, slots in
+                     zip(p.group_n_reads, p.group_slots)) for p in plans]
+        r_max = max(r_tot)
+        branches = []
+        for plan, r_p in zip(plans, r_tot):
+            def branch(banks, credit, pay, plan=plan, r_p=r_p):
+                payloads = tuple(
+                    pay[g, :len(slots), :n_pay]
+                    for g, (slots, n_pay) in enumerate(
+                        zip(plan.group_slots, plan.group_n_payloads)))
+                nb, reads, wall, energy, credit_out, _busy, hidden = \
+                    plan.raw_fn(banks, credit, payloads)
+                if r_p:
+                    fr = jnp.concatenate(
+                        [r for group in reads for r in group], axis=0)
+                    fr = jnp.zeros((r_max, words),
+                                   jnp.uint32).at[:r_p].set(fr)
+                else:
+                    fr = jnp.zeros((r_max, words), jnp.uint32)
+                return nb, credit_out, (fr, wall, energy, hidden,
+                                        credit_out)
+
+            branches.append(branch)
+
+        def drive(banks, credit, idx, pay):
+            def body(carry, x):
+                b, c = carry
+                i, p = x
+                nb, cc, ys = jax.lax.switch(i, branches, b, c, p)
+                return (nb, cc), ys
+
+            (nb, cc), ys = jax.lax.scan(body, (banks, credit), (idx, pay))
+            return nb, cc, ys
+
+        argnums = ((0, 1) if donate and jax.default_backend() != "cpu"
+                   else ())
+        hit = (jax.jit(drive, donate_argnums=argnums), wplan)
+        if len(_workload_fn_cache) >= _WORKLOAD_FN_CACHE_MAX:
+            _workload_fn_cache.pop(next(iter(_workload_fn_cache)))
+    _workload_fn_cache[key] = hit
+    return hit[0]
+
+
+def _phase_result(cfg, plan: _StepPlan, n_steps: int, walls, energies,
+                  greads, hidden, boundary) -> PhaseResult:
+    stats = plan.copy.stats if plan.copy is not None else CopyDrainStats()
+    return PhaseResult(
+        wall_ns=walls,
+        energy_nj=energies,
+        n_steps=n_steps,
+        bus_ns=plan.bus_total,
+        host_bytes=plan.host_bytes,
+        copy_ns=stats.makespan_ns,
+        copy_total_ns=stats.total_ns,
+        copy_queue_ns=stats.queue_ns,
+        rank_switch_ns=plan.switch_ns,
+        link_busy_ns=dict(stats.link_busy_ns),
+        _boundary_credit_ns=boundary,
+        _group_reads=greads,
+        _read_layout=(cfg.n_slots, plan.group_slots),
+        _host_overlap_ns=hidden)
+
+
+def _run_segmented(device: DeviceState, wplan: PipelinePlan, xs_phases,
+                   fn) -> WorkloadResult:
+    """Dispatch a prepared segmented-scan workload and wrap the outputs.
+    Shared by the cold path and the whole-workload identity fast path."""
+    cfg = device.config
+    credit = device.host_credit_ns
+    if not isinstance(credit, jax.Array):
+        credit = jnp.float32(credit)
+    new_banks, credit_out, outs, boundary = fn(
+        device.banks, credit, xs_phases)
+    SCHED_STATS["dispatches"] += 1
+    phase_results = tuple(
+        _phase_result(cfg, plan, wplan.n_steps[p], walls, energies,
+                      greads,
+                      hidden if wplan.async_host[p] else 0.0,
+                      (boundary, p))
+        for p, (plan, (greads, walls, energies, hidden)) in enumerate(
+            zip(wplan.phases, outs)))
+    return WorkloadResult(
+        state=device.with_banks(new_banks, host_credit_ns=credit_out),
+        phases=phase_results,
+        order=None)
+
+
+def schedule_workload(device: DeviceState, phases, *,
+                      order: Sequence[int] | None = None,
+                      use_kernels: bool | None = None,
+                      interpret: bool | None = None,
+                      refresh: bool = False,
+                      async_host: bool = False,
+                      donate: bool = False) -> WorkloadResult:
+    """Run a HETEROGENEOUS multi-phase workload as ONE XLA dispatch.
+
+    ``phases`` is a sequence of phase descriptors (:class:`Phase`, a
+    ``(layout, n_steps)`` pair, or a sequence of per-step layouts); each
+    phase is one recurring step layout in the ``schedule_pipeline`` sense
+    — per-step HOSTW data may differ, command streams may not. Phases may
+    differ arbitrarily from each other (different streams, grouping, copy
+    patterns, async flags).
+
+    With ``order=None`` (the static, hot path) the phases execute
+    back-to-back — one ``lax.scan`` per contiguous phase segment, chained
+    under a single jitted driver. With ``order=[phase_idx, ...]`` (the
+    data-dependent path) the steps execute in exactly that interleaved
+    order under one ``lax.scan`` over the phase index, ``lax.switch``-ing
+    across the per-phase step fns; each phase's steps are consumed FIFO,
+    so ``order`` must name phase ``p`` exactly ``len(phases[p].steps)``
+    times. Switch mode pads every step's reads/payloads to the workload
+    maximum — prefer the segmented lowering when the order is static.
+
+    Equivalent to per-phase ``schedule_pipeline`` / per-step ``schedule``
+    loops: bit-exact states, reads, and meters, with the async host credit
+    and the refresh-history meter threaded through the scan carry across
+    every phase boundary (a sync phase RESETS the credit — see the step-fn
+    contract). Timing/energy outputs stay lazy per phase.
+    """
+    cfg = device.config
+    phase_list = [_as_phase(d) for d in phases]
+    if not phase_list:
+        raise ValueError("schedule_workload needs at least one phase")
+
+    fkey = (cfg, use_kernels, interpret, refresh, async_host, donate)
+    if order is None:
+        entry = _workload_fast_cache.pop(fkey, None)
+        if entry is not None:
+            _workload_fast_cache[fkey] = entry   # MRU touch
+            steps_refs, wplan_c, xs_c, fn_c = entry
+            if len(phase_list) == len(steps_refs) and all(
+                    ph.steps is st and
+                    (async_host if ph.async_host is None
+                     else bool(ph.async_host)) == ah
+                    for ph, (st, ah) in zip(phase_list, steps_refs)):
+                return _run_segmented(device, wplan_c, xs_c, fn_c)
+
+    plans, flats_p, keys, a_hs = [], [], [], []
+    for p, ph in enumerate(phase_list):
+        step_list = list(ph.steps)
+        if not step_list:
+            raise ValueError(f"workload phase {p} has no steps")
+        a_h = async_host if ph.async_host is None else bool(ph.async_host)
+        ids = _layout_ids(tuple(step_list))
+        lkey = (None if ids is None else
+                (cfg, use_kernels, interpret, refresh, a_h, ids))
+        hit = _phase_lower_cache.pop(lkey, None) if lkey else None
+        if hit is None:
+            flats, stripped0, groups0, deferred0 = _lower_recurring(
+                cfg, step_list, what=f"workload phase {p}",
+                hint="each phase of schedule_workload is ONE recurring "
+                     "step layout; split heterogeneous steps into "
+                     "separate phases")
+            plan = _plan_for(cfg, stripped0, groups0, deferred0,
+                             use_kernels=use_kernels, interpret=interpret,
+                             refresh=refresh, async_host=a_h)
+            pk = _plan_key(cfg, groups0, deferred0,
+                           use_kernels=use_kernels, interpret=interpret,
+                           refresh=refresh, async_host=a_h)
+            # flats hold every layout program, pinning the ids in lkey
+            hit = (flats, plan, pk)
+        if lkey:
+            if len(_phase_lower_cache) >= _PHASE_LOWER_CACHE_MAX:
+                _phase_lower_cache.pop(next(iter(_phase_lower_cache)))
+            _phase_lower_cache[lkey] = hit
+        flats, plan, pk = hit
+        plans.append(plan)
+        flats_p.append(flats)
+        keys.append((pk, len(step_list)))
+        a_hs.append(a_h)
+
+    # The phase-sequence signature keys the workload plan cache, keeping
+    # PipelinePlan identity (and thereby the jitted drivers) stable across
+    # warm calls with fresh payload data.
+    wkey = tuple(keys)
+    wplan = _workload_plan_cache.pop(wkey, None)
+    if wplan is None:
+        if len(_workload_plan_cache) >= _WORKLOAD_PLAN_CACHE_MAX:
+            _workload_plan_cache.pop(next(iter(_workload_plan_cache)))
+        wplan = PipelinePlan(
+            phases=tuple(plans),
+            n_steps=tuple(len(ph.steps) for ph in phase_list),
+            async_host=tuple(a_hs),
+            signature=ir.sequence_digest(
+                hashlib.blake2b(repr(k).encode(), digest_size=16).digest()
+                for k in keys))
+    _workload_plan_cache[wkey] = wplan
+
+    if order is None:
+        xs_phases = tuple(
+            tuple(_stack_step_payloads(
+                [_payload_stack([flats[k][s] for s in slots], cfg.words)
+                 for k in range(n)])
+                for slots in plan.group_slots)
+            for plan, flats, n in zip(wplan.phases, flats_p, wplan.n_steps))
+        fn = _workload_fn(wplan, donate)
+        if len(_workload_fast_cache) >= _WORKLOAD_FAST_CACHE_MAX:
+            _workload_fast_cache.pop(next(iter(_workload_fast_cache)))
+        _workload_fast_cache[fkey] = (
+            tuple((ph.steps, ah) for ph, ah in zip(phase_list, a_hs)),
+            wplan, xs_phases, fn)
+        return _run_segmented(device, wplan, xs_phases, fn)
+
+    credit = device.host_credit_ns
+    if not isinstance(credit, jax.Array):
+        credit = jnp.float32(credit)
+
+    order = tuple(int(i) for i in order)
+    n_ph = len(wplan.phases)
+    counts = [0] * n_ph
+    for i in order:
+        if not 0 <= i < n_ph:
+            raise ValueError(
+                f"order index {i} out of range for {n_ph} phases")
+        counts[i] += 1
+    for p, (got, want) in enumerate(zip(counts, wplan.n_steps)):
+        if got != want:
+            raise ValueError(
+                f"order names phase {p} {got} times but the phase has "
+                f"{want} steps — each phase's steps are consumed FIFO")
+
+    g_max = max(len(p.group_slots) for p in wplan.phases)
+    s_max = max((len(s) for p in wplan.phases for s in p.group_slots),
+                default=0)
+    p_max = max((n for p in wplan.phases for n in p.group_n_payloads),
+                default=0)
+    pay = np.zeros((len(order), g_max, s_max, p_max, cfg.words),
+                   np.uint32)
+    cursor = [0] * n_ph
+    for t, pi in enumerate(order):
+        plan = wplan.phases[pi]
+        flat = flats_p[pi][cursor[pi]]
+        cursor[pi] += 1
+        for g, slots in enumerate(plan.group_slots):
+            for j, s in enumerate(slots):
+                for q, arr in enumerate(flat[s].payloads):
+                    pay[t, g, j, q] = np.asarray(arr, np.uint32)
+
+    fn = _switch_fn(wplan, cfg.words, donate)
+    new_banks, credit_out, (fr, walls, energies, hidden, credits) = fn(
+        device.banks, credit,
+        jnp.asarray(np.asarray(order, np.int32)), jnp.asarray(pay))
+    SCHED_STATS["dispatches"] += 1
+    phase_results = []
+    for p, plan in enumerate(wplan.phases):
+        ks = [t for t, o in enumerate(order) if o == p]
+        sel = jnp.asarray(np.asarray(ks, np.int32))
+        fr_p = fr[sel]
+        greads, off = [], 0
+        for g, slots in enumerate(plan.group_slots):
+            n_g = len(slots)
+            rds = []
+            for _ in range(plan.group_n_reads[g]):
+                rds.append(fr_p[:, off:off + n_g])
+                off += n_g
+            greads.append(tuple(rds))
+        phase_results.append(_phase_result(
+            cfg, plan, wplan.n_steps[p], walls[sel], energies[sel],
+            tuple(greads),
+            hidden[sel] if wplan.async_host[p] else 0.0,
+            (credits, ks[-1])))
+    phase_results = tuple(phase_results)
+    order_out = order
+
+    return WorkloadResult(
+        state=device.with_banks(new_banks, host_credit_ns=credit_out),
+        phases=phase_results,
+        order=order_out)
 
 
 # ---------------------------------------------------------------------------

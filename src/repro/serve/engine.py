@@ -3,6 +3,11 @@
 Greedy or temperature sampling over a batch of equal-length prompts (a
 production engine adds continuous batching on top; the step function here is
 exactly the unit the dry-run lowers as ``serve_step``).
+
+The whole decode loop — token sampling, key splitting, and the per-token
+``decode_step`` — runs as ONE jitted ``lax.scan``: generating N tokens
+costs one host dispatch after prefill, not one per token plus host-side
+``jax.random.split``/argmax round-trips.
 """
 from __future__ import annotations
 
@@ -12,6 +17,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import decode_step, prefill
+
+# Host→device dispatches issued by the decode loop (excludes prefill):
+# one jitted scan per generate call. Reset-able by tests, which assert the
+# whole loop stays a single dispatch regardless of max_new_tokens.
+DECODE_STATS = {"dispatches": 0}
 
 
 def greedy_generate(cfg, params, batch, *, max_new_tokens: int,
@@ -26,27 +36,30 @@ def greedy_generate(cfg, params, batch, *, max_new_tokens: int,
 
     logits, caches = prefill(cfg, params, batch, max_cache_len)
 
-    @functools.partial(jax.jit, static_argnums=())
-    def one_step(tok, pos, caches):
-        lg, caches = decode_step(cfg, params, {"tokens": tok}, pos, caches)
-        return lg, caches
-
     def sample(lg, k):
         lg = lg.reshape(lg.shape[0], -1)[:, :cfg.vocab_size]
         if temperature <= 0.0:
             return jnp.argmax(lg, axis=-1).astype(jnp.int32)
         return jax.random.categorical(k, lg / temperature).astype(jnp.int32)
 
-    key = key if key is not None else jax.random.PRNGKey(0)
-    toks = []
-    k0, key = jax.random.split(key)
-    tok = sample(logits, k0)[:, None]
-    toks.append(tok)
-    pos = prompt_len
-    for _ in range(max_new_tokens - 1):
-        logits, caches = one_step(tok, pos, caches)
+    @functools.partial(jax.jit, static_argnums=())
+    def decode_tokens(lg0, caches, key, pos0):
         k0, key = jax.random.split(key)
-        tok = sample(logits, k0)[:, None]
-        toks.append(tok)
-        pos += 1
-    return jnp.concatenate(toks, axis=1)
+        tok0 = sample(lg0, k0)[:, None]
+
+        def body(carry, _):
+            tok, pos, caches, key = carry
+            lg, caches = decode_step(cfg, params, {"tokens": tok}, pos,
+                                     caches)
+            k0, key = jax.random.split(key)
+            nxt = sample(lg, k0)[:, None]
+            return (nxt, pos + 1, caches, key), nxt
+
+        _, rest = jax.lax.scan(body, (tok0, pos0, caches, key), None,
+                               length=max_new_tokens - 1)
+        # tok0 (B, 1) + rest (T-1, B, 1) -> (B, T)
+        return jnp.concatenate([tok0[None], rest], axis=0)[..., 0].T
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    DECODE_STATS["dispatches"] += 1
+    return decode_tokens(logits, caches, key, jnp.int32(prompt_len))

@@ -208,6 +208,42 @@ def test_async_credit_is_the_previous_compute_window():
     assert r1.host_overlap_ns < r1.host_bus_ns
 
 
+def test_sync_phase_resets_async_credit():
+    """async -> sync -> async: the sync step RESETS the double-buffer
+    credit (its host engine ran synchronously — nothing is prefetched),
+    so the async step right after it hides NOTHING, and only the one
+    after that overlaps again, by exactly min(host bus, previous compute
+    window) — all hand-computed."""
+    rng = np.random.default_rng(14)
+    heavy = [_host_shift_prog(_rand_row(rng), 12) for _ in range(2)]
+    light = [_host_shift_prog(_rand_row(rng), 1), None]
+
+    # async step banks a positive credit...
+    r0 = pim.schedule(pim.make_device(_cfg(1, 1, 2)), heavy,
+                      async_host=True)
+    assert float(r0.state.host_credit_ns) > 0.0
+    # ...the sync step consumes nothing and must RESET the leaf to zero
+    # (the old behaviour silently carried its compute window instead)
+    r1 = pim.schedule(r0.state, light, async_host=False)
+    assert r1.host_overlap_ns == 0.0
+    assert float(r1.state.host_credit_ns) == 0.0
+
+    # async again: nothing was prefetched during the sync step, so this
+    # step stays fully exposed — its wall equals the sync wall exactly
+    r2 = pim.schedule(r1.state, heavy, async_host=True)
+    assert r2.host_overlap_ns == 0.0
+    sync_wall = pim.schedule(pim.make_device(_cfg(1, 1, 2)), heavy).wall_ns
+    assert float(r2.wall_ns) == pytest.approx(float(sync_wall), rel=1e-6)
+
+    # and the NEXT async step overlaps again: min(host bus, r2's compute)
+    credit = float(r2.state.host_credit_ns)
+    assert credit > 0.0
+    r3 = pim.schedule(r2.state, heavy, async_host=True)
+    host_total = 2 * pim.host_bus_ns(heavy[0], T)   # one channel, 2 banks
+    assert r3.host_overlap_ns == pytest.approx(min(host_total, credit),
+                                               rel=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # COPY drain contention
 # ---------------------------------------------------------------------------

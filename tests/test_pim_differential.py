@@ -256,6 +256,116 @@ def _assert_pipeline_agrees(seed: int, n_steps: int, async_host=False):
                                float(pr.state.host_credit_ns), rtol=1e-6)
 
 
+def _random_workload(rng):
+    """Random 2-3-phase workload on the 4-bank device: a recurring compute
+    phase with fresh per-step payloads, a gather+COPY in-DRAM movement
+    phase, and (sometimes) a readback phase."""
+    cfg = pim.DeviceConfig(channels=2, ranks=1, banks_per_rank=2,
+                           num_rows=ROWS, words=WORDS)
+    layout = [_build_program(rng, int(rng.integers(1, 10)))
+              if rng.random() < 0.75 else None for _ in range(4)]
+    if all(p is None for p in layout):
+        layout[0] = _build_program(rng, 4)
+    k0 = int(rng.integers(1, 4))
+    compute_steps = tuple(
+        [p.with_payloads(rng.integers(0, 2**32, (len(p.payloads), WORDS),
+                                      dtype=np.uint32))
+         if p is not None else None for p in layout]
+        for _ in range(k0))
+
+    moves = []
+    for _ in range(int(rng.integers(1, 4))):
+        sb, db = (int(x) for x in rng.choice(4, 2, replace=False))
+        moves.append(((sb, 0, int(rng.integers(0, USER_ROWS))),
+                      (db, 0, int(rng.integers(0, USER_ROWS)))))
+    gather = pim.gather_rows(cfg, moves)
+    k1 = int(rng.integers(1, 3))
+
+    phases = [pim.Phase(steps=compute_steps),
+              pim.Phase.repeat(gather, k1)]
+    if rng.random() < 0.7:
+        rb = []
+        for _ in range(4):
+            if rng.random() < 0.5:
+                bb = ir.ProgramBuilder(ROWS, WORDS)
+                for r in rng.choice(USER_ROWS, 2, replace=False):
+                    bb.read_row(int(r))
+                rb.append(bb.build())
+            else:
+                rb.append(None)
+        if all(p is None for p in rb):
+            bb = ir.ProgramBuilder(ROWS, WORDS)
+            bb.read_row(0)
+            rb[0] = bb.build()
+        phases.append(pim.Phase.repeat(rb, 1))
+    return cfg, phases
+
+
+def _assert_workload_agrees(seed: int, async_host=False, use_order=False):
+    """schedule_workload leg: a heterogeneous multi-phase workload under
+    one dispatch (segmented scan, or lax.switch with an interleaved order)
+    must be bit-exact against per-step schedule() calls — states, reads,
+    meters, per-phase walls/energies, and the async credit at every phase
+    boundary."""
+    rng = np.random.default_rng(seed)
+    cfg, phases = _random_workload(rng)
+
+    order = None
+    if use_order:
+        order = [p for p, ph in enumerate(phases)
+                 for _ in range(len(ph.steps))]
+        rng.shuffle(order)
+
+    # per-step reference, consuming each phase's steps FIFO in `order`
+    seq = ([(p, step) for p, ph in enumerate(phases) for step in ph.steps]
+           if order is None else None)
+    if seq is None:
+        cursors = [list(ph.steps) for ph in phases]
+        seq = [(p, cursors[p].pop(0)) for p in order]
+    dev = pim.make_device(cfg)
+    walls = [[] for _ in phases]
+    energies = [[] for _ in phases]
+    reads = [[] for _ in phases]
+    boundary = [0.0] * len(phases)
+    for p, step in seq:
+        r = pim.schedule(dev, step, async_host=async_host)
+        dev = r.state
+        walls[p].append(float(r.wall_ns))
+        energies[p].append(float(r.energy_nj))
+        reads[p].append(r.reads)
+        boundary[p] = float(dev.host_credit_ns)
+
+    res = pim.schedule_workload(pim.make_device(cfg), phases, order=order,
+                                async_host=async_host)
+    assert np.array_equal(np.asarray(dev.banks.bits),
+                          np.asarray(res.state.banks.bits))
+    for f in INT_FIELDS:
+        assert np.array_equal(
+            np.asarray(getattr(dev.banks.meter, f)),
+            np.asarray(getattr(res.state.banks.meter, f))), f
+    for f in FLOAT_FIELDS:
+        np.testing.assert_allclose(
+            np.asarray(getattr(res.state.banks.meter, f)),
+            np.asarray(getattr(dev.banks.meter, f)), rtol=1e-6,
+            err_msg=f"workload meter.{f}")
+    for p, pr in enumerate(res.phases):
+        np.testing.assert_allclose(walls[p], np.asarray(pr.wall_ns),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(energies[p], np.asarray(pr.energy_nj),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(boundary[p], pr.boundary_credit_ns,
+                                   rtol=1e-6, atol=1e-6)
+        preads = pr.reads
+        for k in range(pr.n_steps):
+            for slot in range(cfg.n_slots):
+                assert len(reads[p][k][slot]) == len(preads[k][slot])
+                for x, y in zip(reads[p][k][slot], preads[k][slot]):
+                    assert np.array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_allclose(float(dev.host_credit_ns),
+                               float(res.state.host_credit_ns),
+                               rtol=1e-6, atol=1e-6)
+
+
 if HAVE_HYPOTHESIS:
     @given(seed=st.integers(0, 2**32 - 1), n_ops=st.integers(1, 24))
     def test_differential_eager_compiled_scheduled(seed, n_ops):
@@ -278,6 +388,14 @@ if HAVE_HYPOTHESIS:
            async_host=st.booleans())
     def test_differential_pipeline_vs_per_step(seed, n_steps, async_host):
         _assert_pipeline_agrees(seed, n_steps, async_host)
+
+    # capped harder: every example lowers 2-3 fresh phase plans PLUS a
+    # multi-phase driver (segmented chain or lax.switch over all branches)
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1), async_host=st.booleans(),
+           use_order=st.booleans())
+    def test_differential_workload_vs_per_step(seed, async_host, use_order):
+        _assert_workload_agrees(seed, async_host, use_order)
 else:
     @pytest.mark.parametrize("seed", range(25))
     def test_differential_eager_compiled_scheduled(seed):
@@ -298,6 +416,11 @@ else:
     def test_differential_pipeline_vs_per_step(seed):
         _assert_pipeline_agrees(seed, 1 + seed % 3,
                                 async_host=bool(seed % 2))
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_differential_workload_vs_per_step(seed):
+        _assert_workload_agrees(seed, async_host=bool(seed % 2),
+                                use_order=bool(seed % 3 == 0))
 
 
 @pytest.mark.parametrize("seed", range(3))

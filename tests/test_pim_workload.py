@@ -1,0 +1,357 @@
+"""Multi-phase workload scheduler: ``schedule_workload`` regression guards.
+
+Locks down the heterogeneous-pipeline layer (DESIGN.md §11): a whole
+multi-phase workload — alternating step plans with different command
+streams, grouping, copy patterns, and async flags — lowers into ONE XLA
+dispatch (segmented ``lax.scan`` chain, or a ``lax.switch`` scan for
+data-dependent phase orders), bit-exact against per-step ``schedule()``.
+Warm re-schedules with fresh payload data must be pure cache traffic:
+no plan misses, no compile misses, no columnar rebuilds, no retraces.
+"""
+import importlib
+
+import numpy as np
+import pytest
+
+from repro.core import pim
+from repro.core.bitplane import PimVM
+from repro.core.pim import exec as pim_exec
+from repro.core.pim import ir
+
+# the package re-exports schedule() the function, shadowing the module
+pim_schedule = importlib.import_module("repro.core.pim.schedule")
+
+WORDS = 8
+ROWS = 32
+T = pim.DEFAULT_TIMING
+
+
+def _rand_row(rng, words=WORDS):
+    return rng.integers(0, 2**32, (words,), dtype=np.uint32)
+
+
+def _cfg(channels=1, ranks=1, banks_per_rank=4):
+    return pim.DeviceConfig(channels=channels, ranks=ranks,
+                            banks_per_rank=banks_per_rank,
+                            num_rows=ROWS, words=WORDS)
+
+
+def _reset_stats():
+    pim_schedule.SCHED_STATS.update(dispatches=0, plan_misses=0,
+                                    compile_misses=0)
+    pim_exec.RUNNER_STATS["traces"] = 0
+
+
+def _compute_prog(data, k=4):
+    b = pim.ProgramBuilder(ROWS, WORDS)
+    b.issue()
+    b.write_row(0, data)
+    b.shift_k(0, 1, k)
+    b.ambit_xor(0, 1, 2)
+    b.read_row(2)
+    return b.build()
+
+
+def _readback_prog(rows=(0, 2)):
+    b = pim.ProgramBuilder(ROWS, WORDS)
+    for r in rows:
+        b.read_row(r)
+    return b.build()
+
+
+def _workload(rng, cfg):
+    """compute (fresh payloads per step) -> gather COPYs -> readback."""
+    layout = [_compute_prog(_rand_row(rng), k=3), None,
+              _compute_prog(_rand_row(rng), k=5), None]
+    compute = pim.Phase(steps=tuple(
+        [p.with_payloads([_rand_row(rng)]) if p is not None else None
+         for p in layout]
+        for _ in range(3)))
+    gather = pim.gather_rows(cfg, [((0, 0, 2), (1, 0, 4)),
+                                   ((2, 0, 2), (3, 0, 4))])
+    readback = [_readback_prog((4,)) if b in (1, 3) else None
+                for b in range(4)]
+    return [compute, pim.Phase.repeat(gather, 2),
+            pim.Phase.repeat(readback, 1)]
+
+
+def _run_per_step(cfg, phases, order=None, async_host=False):
+    """Per-step schedule() reference, consuming phase steps FIFO."""
+    if order is None:
+        seq = [(p, s) for p, ph in enumerate(phases) for s in ph.steps]
+    else:
+        cursors = [list(ph.steps) for ph in phases]
+        seq = [(p, cursors[p].pop(0)) for p in order]
+    dev = pim.make_device(cfg)
+    reads = [[] for _ in phases]
+    for p, step in seq:
+        r = pim.schedule(dev, step, async_host=async_host)
+        dev = r.state
+        reads[p].append(r.reads)
+    return dev, reads
+
+
+def _assert_reads_equal(cfg, ref_reads, res):
+    for p, pr in enumerate(res.phases):
+        got = pr.reads
+        for k in range(pr.n_steps):
+            for slot in range(cfg.n_slots):
+                assert len(ref_reads[p][k][slot]) == len(got[k][slot])
+                for x, y in zip(ref_reads[p][k][slot], got[k][slot]):
+                    assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# One dispatch, bit-exact vs per-step
+# ---------------------------------------------------------------------------
+
+def test_workload_matches_per_step_schedule():
+    cfg = _cfg()
+    rng = np.random.default_rng(0)
+    phases = _workload(rng, cfg)
+    dev, ref_reads = _run_per_step(cfg, phases)
+    res = pim.schedule_workload(pim.make_device(cfg), phases)
+    assert np.array_equal(np.asarray(dev.banks.bits),
+                          np.asarray(res.state.banks.bits))
+    _assert_reads_equal(cfg, ref_reads, res)
+    assert res.order is None
+    assert res.n_steps == 6
+
+
+def test_workload_is_single_dispatch():
+    cfg = _cfg()
+    rng = np.random.default_rng(1)
+    phases = _workload(rng, cfg)
+    pim.schedule_workload(pim.make_device(cfg), phases)   # warm compile
+    _reset_stats()
+    pim.schedule_workload(pim.make_device(cfg), phases)
+    assert pim_schedule.SCHED_STATS["dispatches"] == 1
+    assert pim_exec.RUNNER_STATS["traces"] == 0
+
+
+def test_warm_workload_with_fresh_payloads_rebuilds_nothing():
+    """The satellite-6 guard: a warm re-schedule of the SAME phase
+    sequence with brand-new payload data is pure cache traffic — zero
+    plan misses, zero compile misses, zero columnar table rebuilds, zero
+    driver retraces, one dispatch."""
+    cfg = _cfg()
+    rng = np.random.default_rng(2)
+    layout = [_compute_prog(_rand_row(rng)), None, None, None]
+    gather = pim.gather_rows(cfg, [((0, 0, 2), (1, 0, 4))])
+    readback = [None, _readback_prog((4,)), None, None]
+
+    def make_phases():
+        # only the payload DATA is fresh; with_payloads shares columns
+        compute = pim.Phase(steps=tuple(
+            [layout[0].with_payloads([_rand_row(rng)]), None, None, None]
+            for _ in range(3)))
+        return [compute, pim.Phase.repeat(gather, 2),
+                pim.Phase.repeat(readback, 1)]
+
+    pim.schedule_workload(pim.make_device(cfg), make_phases())  # warm
+    _reset_stats()
+    builds0 = ir.COLUMN_STATS["builds"]
+    res = pim.schedule_workload(pim.make_device(cfg), make_phases())
+    assert pim_schedule.SCHED_STATS["dispatches"] == 1
+    assert pim_schedule.SCHED_STATS["plan_misses"] == 0
+    assert pim_schedule.SCHED_STATS["compile_misses"] == 0
+    assert pim_exec.RUNNER_STATS["traces"] == 0
+    assert ir.COLUMN_STATS["builds"] == builds0
+    assert res.n_steps == 6
+
+
+def test_workload_plan_identity_is_stable_across_warm_calls():
+    """Warm calls reuse the SAME PipelinePlan object (the jitted drivers
+    are keyed on its identity), and its signature is deterministic."""
+    cfg = _cfg()
+    rng = np.random.default_rng(3)
+    phases = _workload(rng, cfg)
+    pim.schedule_workload(pim.make_device(cfg), phases)
+    plans = list(pim_schedule._workload_plan_cache.values())
+    pim.schedule_workload(pim.make_device(cfg), phases)
+    plans2 = list(pim_schedule._workload_plan_cache.values())
+    assert plans[-1] is plans2[-1]
+    assert isinstance(plans[-1].signature, bytes)
+    assert len(plans[-1].signature) == 16
+
+
+# ---------------------------------------------------------------------------
+# Switch lowering (data-dependent phase order)
+# ---------------------------------------------------------------------------
+
+def test_switch_order_matches_per_step_schedule():
+    cfg = _cfg()
+    rng = np.random.default_rng(4)
+    phases = _workload(rng, cfg)
+    order = [0, 1, 0, 2, 0, 1]          # interleaved, FIFO within phase
+    dev, ref_reads = _run_per_step(cfg, phases, order=order)
+    res = pim.schedule_workload(pim.make_device(cfg), phases, order=order)
+    assert np.array_equal(np.asarray(dev.banks.bits),
+                          np.asarray(res.state.banks.bits))
+    _assert_reads_equal(cfg, ref_reads, res)
+    assert res.order == tuple(order)
+
+
+def test_switch_order_is_single_dispatch():
+    cfg = _cfg()
+    rng = np.random.default_rng(5)
+    phases = _workload(rng, cfg)
+    order = [0, 1, 0, 2, 0, 1]
+    pim.schedule_workload(pim.make_device(cfg), phases, order=order)
+    _reset_stats()
+    pim.schedule_workload(pim.make_device(cfg), phases, order=order)
+    assert pim_schedule.SCHED_STATS["dispatches"] == 1
+    assert pim_exec.RUNNER_STATS["traces"] == 0
+
+
+def test_switch_order_validation():
+    cfg = _cfg()
+    rng = np.random.default_rng(6)
+    phases = _workload(rng, cfg)
+    with pytest.raises(ValueError, match="out of range"):
+        pim.schedule_workload(pim.make_device(cfg), phases,
+                              order=[0, 1, 0, 3, 0, 1])
+    with pytest.raises(ValueError, match="consumed FIFO"):
+        pim.schedule_workload(pim.make_device(cfg), phases,
+                              order=[0, 0, 0, 0, 1, 2])
+
+
+# ---------------------------------------------------------------------------
+# Phase descriptors & recurrence contract
+# ---------------------------------------------------------------------------
+
+def test_phase_descriptor_normalization():
+    """(layout, n) pairs and bare step sequences are accepted and hit the
+    SAME cached workload plan as the equivalent Phase objects."""
+    cfg = _cfg()
+    rng = np.random.default_rng(7)
+    layout = [_compute_prog(_rand_row(rng)), None, None, None]
+    gather = pim.gather_rows(cfg, [((0, 0, 2), (2, 0, 4))])
+    explicit = [pim.Phase.repeat(layout, 2), pim.Phase.repeat(gather, 1)]
+    sugar = [(layout, 2), [gather]]
+
+    r1 = pim.schedule_workload(pim.make_device(cfg), explicit)
+    _reset_stats()
+    r2 = pim.schedule_workload(pim.make_device(cfg), sugar)
+    assert pim_schedule.SCHED_STATS["plan_misses"] == 0
+    assert pim_exec.RUNNER_STATS["traces"] == 0
+    assert np.array_equal(np.asarray(r1.state.banks.bits),
+                          np.asarray(r2.state.banks.bits))
+
+
+def test_non_recurring_phase_raises():
+    cfg = _cfg()
+    rng = np.random.default_rng(8)
+    s1 = [_compute_prog(_rand_row(rng), k=3), None, None, None]
+    s2 = [_compute_prog(_rand_row(rng), k=7), None, None, None]
+    with pytest.raises(ValueError, match="does not recur"):
+        pim.schedule_workload(pim.make_device(cfg),
+                              [pim.Phase(steps=(s1, s2))])
+
+
+def test_empty_workload_raises():
+    with pytest.raises(ValueError, match="at least one phase"):
+        pim.schedule_workload(pim.make_device(_cfg()), [])
+
+
+# ---------------------------------------------------------------------------
+# Async credit across phase boundaries
+# ---------------------------------------------------------------------------
+
+def test_boundary_credit_matches_per_step_and_resets_on_sync():
+    """Per-phase async overrides: an async phase leaves its last step's
+    compute window as the boundary credit; a following SYNC phase resets
+    it to zero (the credit-reset contract), bit-identical to the per-step
+    reference at every boundary."""
+    cfg = _cfg()
+    rng = np.random.default_rng(9)
+    layout = [_compute_prog(_rand_row(rng)), None,
+              _compute_prog(_rand_row(rng)), None]
+    phases = [pim.Phase.repeat(layout, 2, async_host=True),
+              pim.Phase.repeat([None, _readback_prog((2,)), None, None], 1,
+                               async_host=False)]
+
+    dev = pim.make_device(cfg)
+    boundary = []
+    for ph in phases:
+        for step in ph.steps:
+            dev = pim.schedule(dev, step,
+                               async_host=bool(ph.async_host)).state
+        boundary.append(float(dev.host_credit_ns))
+
+    res = pim.schedule_workload(pim.make_device(cfg), phases)
+    assert boundary[0] > 0.0
+    assert res.phases[0].boundary_credit_ns == pytest.approx(boundary[0],
+                                                             rel=1e-6)
+    assert res.phases[1].boundary_credit_ns == 0.0
+    assert float(res.state.host_credit_ns) == 0.0
+    np.testing.assert_allclose(float(dev.host_credit_ns),
+                               float(res.state.host_credit_ns), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# PimVM.run_workload
+# ---------------------------------------------------------------------------
+
+def _vm_xor_step(vm, x):
+    a = vm.load(x[0])
+    b = vm.load(x[1])
+    r = vm.xor(a, b)
+    vm.free(a, b)
+    return r
+
+
+def _vm_and_not_step(vm, x):
+    a = vm.load(x[0])
+    b = vm.load(x[1])
+    r = vm.and_(a, b)
+    s = vm.not_(r)
+    vm.free(a, b, r)
+    return s
+
+
+@pytest.mark.parametrize("n_banks", [1, 4])
+def test_vm_run_workload_matches_reference(n_banks):
+    rng = np.random.default_rng(10)
+    vm = PimVM(width=8, num_rows=96, words=16, n_banks=n_banks,
+               async_host=n_banks > 1)
+    xs_a = [(rng.integers(0, 256, vm.lanes), rng.integers(0, 256, vm.lanes))
+            for _ in range(3)]
+    xs_b = [(rng.integers(0, 256, vm.lanes), rng.integers(0, 256, vm.lanes))
+            for _ in range(2)]
+    got_a, got_b = vm.run_workload([(_vm_xor_step, xs_a),
+                                    (_vm_and_not_step, xs_b)])
+    for k, (a, b) in enumerate(xs_a):
+        assert np.array_equal(got_a[k], a ^ b), k
+    for k, (a, b) in enumerate(xs_b):
+        assert np.array_equal(got_b[k], (~(a & b)) & 0xFF), k
+
+
+def test_vm_run_workload_is_one_dispatch_when_sharded():
+    rng = np.random.default_rng(11)
+    vm = PimVM(width=8, num_rows=96, words=16, n_banks=2)
+    xs_a = [(rng.integers(0, 256, vm.lanes), rng.integers(0, 256, vm.lanes))
+            for _ in range(3)]
+    xs_b = [(rng.integers(0, 256, vm.lanes), rng.integers(0, 256, vm.lanes))
+            for _ in range(2)]
+    phases = [(_vm_xor_step, xs_a), (_vm_and_not_step, xs_b)]
+    vm.run_workload(phases)             # warm compile
+    _reset_stats()
+    vm.run_workload(phases)
+    assert pim_schedule.SCHED_STATS["dispatches"] == 1
+    assert pim_exec.RUNNER_STATS["traces"] == 0
+
+
+def test_vm_run_workload_divergent_step_raises():
+    rng = np.random.default_rng(12)
+    vm = PimVM(width=8, num_rows=96, words=16)
+    calls = {"n": 0}
+
+    def bad_step(vm, x):
+        calls["n"] += 1
+        a = vm.load(x)
+        return vm.not_(a) if calls["n"] > 1 else a
+
+    with pytest.raises(ValueError, match="recorded a different"):
+        vm.run_workload([(bad_step, [rng.integers(0, 256, vm.lanes),
+                                     rng.integers(0, 256, vm.lanes)])])

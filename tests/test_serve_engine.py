@@ -5,7 +5,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import init_params
-from repro.serve.engine import greedy_generate
+from repro.serve.engine import DECODE_STATS, greedy_generate
 
 from util import make_inputs
 
@@ -44,6 +44,20 @@ def test_generate_respects_cache_budget(setup):
     out = greedy_generate(cfg, params, prompts, max_new_tokens=4,
                           max_cache_len=16)
     assert out.shape == (1, 4)
+
+
+def test_decode_loop_is_single_dispatch(setup):
+    """The whole decode loop (sampling + key splits + decode_step) runs as
+    ONE jitted scan: generating N tokens costs one dispatch after prefill,
+    not N host round-trips — and the fold into the scan is greedy-stable."""
+    cfg, params = setup
+    prompts = make_inputs(cfg, 2, 16, labels=False)
+    out1 = greedy_generate(cfg, params, prompts, max_new_tokens=8)
+    DECODE_STATS["dispatches"] = 0
+    out2 = greedy_generate(cfg, params, prompts, max_new_tokens=8)
+    assert DECODE_STATS["dispatches"] == 1
+    assert out1.shape == (2, 8)
+    assert jnp.array_equal(out1, out2)      # greedy decode is deterministic
 
 
 def test_ssm_arch_generates():
