@@ -2,7 +2,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke lint
+.PHONY: test bench-smoke lint pimlint typecheck
 
 # Tier-1 verify (ROADMAP.md). Hypothesis is optional; the suite runs
 # deterministic fallback examples when it is absent.
@@ -25,3 +25,18 @@ lint:
 	@$(PYTHON) -c "import pyflakes" 2>/dev/null \
 	  && $(PYTHON) -m pyflakes src tests benchmarks examples \
 	  || echo "pyflakes not installed - compileall syntax check only"
+
+# Static PIM-program verifier (DESIGN.md §12): every golden known-bad
+# fixture must flag its seeded hazard, the clean fixture must stay clean,
+# and the repo's canonical workload generators must be error-free. Writes
+# the machine-readable report for CI artifact upload.
+pimlint:
+	$(PYTHON) -m repro.core.pim.lint tests/fixtures/lint/*.trace \
+	  --workloads --json pimlint_report.json
+
+# mypy (lenient profile, mypy.ini) over the pim core; gated on
+# availability like pyflakes — clean environments skip, CI installs it.
+typecheck:
+	@$(PYTHON) -c "import mypy" 2>/dev/null \
+	  && $(PYTHON) -m mypy --config-file mypy.ini src/repro/core/pim \
+	  || echo "mypy not installed - skipping typecheck"

@@ -48,7 +48,8 @@ class PimVM:
 
     def __init__(self, width: int, num_rows: int = 128, words: int = 16,
                  cfg: DDR3Timing = DEFAULT_TIMING, eager: bool = False,
-                 n_banks: int = 1, async_host: bool = False):
+                 n_banks: int = 1, async_host: bool = False,
+                 verify: bool = False):
         assert (words * 32) % width == 0
         assert words % n_banks == 0, (words, n_banks)
         assert not (async_host and n_banks == 1), \
@@ -59,6 +60,7 @@ class PimVM:
         self.eager = eager
         self.n_banks = n_banks
         self.async_host = async_host
+        self.verify = bool(verify)
         self.lanes = (words * 32) // width
         self._num_rows = num_rows
         self._reads: tuple = ()
@@ -68,14 +70,16 @@ class PimVM:
         if n_banks == 1:
             st = make_subarray(num_rows, words)
             self.state: SubarrayState = isa.reserve_control_rows(st)
-            self._builder = ProgramBuilder(num_rows, words)
+            self._builder = ProgramBuilder(num_rows, words,
+                                           verify=self.verify)
         else:
             assert not eager, "lane sharding needs the recorded-IR path"
             self.bank_words = words // n_banks
             assert (self.bank_words * 32) % width == 0, \
                 "element width must tile the per-bank word slice"
             self.bank_lanes = (self.bank_words * 32) // width
-            self._builder = ProgramBuilder(num_rows, self.bank_words)
+            self._builder = ProgramBuilder(num_rows, self.bank_words,
+                                           verify=self.verify)
             self._bank_payloads: list[list[np.ndarray]] = []
             self._read_result = None
             self._device = make_device(DeviceConfig(
@@ -113,7 +117,8 @@ class PimVM:
             res = pim_exec.execute(self._builder.build(), self.state, self.cfg)
             self.state = res.state
             self._reads = res.reads
-            self._builder = ProgramBuilder(self._num_rows, self.words)
+            self._builder = ProgramBuilder(self._num_rows, self.words,
+                                           verify=self.verify)
             return
         prog = self._builder.build()
         programs = [
@@ -127,7 +132,8 @@ class PimVM:
         self._wall_ns = self._wall_ns + res.wall_ns
         self._host_overlap_ns = (self._host_overlap_ns
                                  + res.host_overlap_ns_lazy)
-        self._builder = ProgramBuilder(self._num_rows, self.bank_words)
+        self._builder = ProgramBuilder(self._num_rows, self.bank_words,
+                                       verify=self.verify)
         self._bank_payloads = []
 
     def take_recorded(self) -> PimProgram:
@@ -143,7 +149,8 @@ class PimVM:
         """
         assert self.n_banks == 1, "take_recorded needs a single-bank VM"
         prog = self._builder.build()
-        self._builder = ProgramBuilder(self._num_rows, self.words)
+        self._builder = ProgramBuilder(self._num_rows, self.words,
+                                       verify=self.verify)
         return prog
 
     def run_pipeline(self, step, xs) -> list:
@@ -182,12 +189,14 @@ class PimVM:
             slots = [self._builder.read_row(r) for r in regs]
             progs.append(self._builder.build())
             if self.n_banks == 1:
-                self._builder = ProgramBuilder(self._num_rows, self.words)
+                self._builder = ProgramBuilder(self._num_rows, self.words,
+                                               verify=self.verify)
             else:
                 bank_payloads.append(self._bank_payloads)
                 self._bank_payloads = []
                 self._builder = ProgramBuilder(self._num_rows,
-                                               self.bank_words)
+                                               self.bank_words,
+                                               verify=self.verify)
             if read_slots is None:
                 read_slots = slots
                 single = not isinstance(out, (list, tuple))
@@ -279,12 +288,14 @@ class PimVM:
                 progs.append(self._builder.build())
                 if self.n_banks == 1:
                     self._builder = ProgramBuilder(self._num_rows,
-                                                   self.words)
+                                                   self.words,
+                                                   verify=self.verify)
                 else:
                     bank_payloads.append(self._bank_payloads)
                     self._bank_payloads = []
                     self._builder = ProgramBuilder(self._num_rows,
-                                                   self.bank_words)
+                                                   self.bank_words,
+                                                   verify=self.verify)
                 if read_slots is None:
                     read_slots = slots
                     single = not isinstance(out, (list, tuple))

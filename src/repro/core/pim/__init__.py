@@ -29,8 +29,23 @@ from .schedule import (CopyDrainStats, Phase, PhaseResult, PipelinePlan,
                        compiled_for, gather_rows, schedule,
                        schedule_pipeline, schedule_workload, shard_lanes,
                        shard_rows, stream_key, xor_reduce_program)
+from .lint import (CATALOG, Diagnostic, LintError, LintReport, lint_program,
+                   lint_schedule, lint_trace)
 from .variation import (PAPER_TABLE4, TECH22, Tech22nm, shift_failure_rate)
 from .area import AreaModel, PAPER_TABLE5, mim_capacitor_plate_side_um
+
+
+def reset_stats() -> None:
+    """Zero the module-level instrumentation counters (column builds,
+    scheduler plan/compile misses & dispatches, runner retraces). Test
+    hygiene: lets stats-asserting tests run in any order."""
+    from .exec import RUNNER_STATS
+    from .ir import COLUMN_STATS
+    from .schedule import SCHED_STATS
+    for counters in (COLUMN_STATS, SCHED_STATS, RUNNER_STATS):
+        for k in counters:
+            counters[k] = 0
+
 
 __all__ = [
     "CostMeter", "SubarrayState", "make_bank", "make_subarray",
@@ -58,6 +73,8 @@ __all__ = [
     "PipelineResult", "ScheduleResult", "WorkloadResult", "compiled_for",
     "gather_rows", "schedule", "schedule_pipeline", "schedule_workload",
     "shard_lanes", "shard_rows", "stream_key", "xor_reduce_program",
+    "CATALOG", "Diagnostic", "LintError", "LintReport", "lint_program",
+    "lint_schedule", "lint_trace", "reset_stats",
     "PAPER_TABLE4", "TECH22", "Tech22nm", "shift_failure_rate",
     "AreaModel", "PAPER_TABLE5", "mim_capacitor_plate_side_um",
 ]

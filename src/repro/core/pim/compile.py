@@ -563,13 +563,24 @@ def compile_program(program: ir.PimProgram,
                     cfg: DDR3Timing = DEFAULT_TIMING, *,
                     optimize: bool = False,
                     live_out: set[int] | None = None,
-                    shift_fuse_min: int = SHIFT_FUSE_MIN) -> CompiledProgram:
-    """Full pipeline: (optional DCE) → fusion → cost tables.
+                    shift_fuse_min: int = SHIFT_FUSE_MIN,
+                    verify: bool = False) -> CompiledProgram:
+    """Full pipeline: (optional lint) → (optional DCE) → fusion → cost
+    tables.
 
     ``optimize=True`` applies dead-copy elimination first; the resulting
     meter reflects the *optimized* stream (cheaper than eager — that is the
     point), so equivalence tests run with the default ``optimize=False``.
+
+    ``verify=True`` runs the static verifier (``lint.lint_program``) over
+    the INPUT stream before any transformation and raises
+    :class:`~.lint.LintError` on error-severity diagnostics.
     """
+    if verify:
+        from . import lint      # lazy: lint imports this module's passes
+        report = lint.lint_program(program)
+        if not report.ok:
+            raise lint.LintError(report)
     if optimize:
         program = dead_copy_elimination(program, live_out)
     f_tab, i_tab = cost_tables(program, cfg)

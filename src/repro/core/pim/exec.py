@@ -256,7 +256,8 @@ def make_runner(program, cfg: DDR3Timing = DEFAULT_TIMING, *,
                 use_kernels: bool | None = None,
                 interpret: bool | None = None,
                 refresh: bool = False,
-                payload_arg: bool = False):
+                payload_arg: bool = False,
+                verify: bool = False):
     """Build a jitted ``state -> ExecResult`` function for one program.
 
     The returned runner is cached per (program, flags, cfg-value) and is
@@ -269,7 +270,17 @@ def make_runner(program, cfg: DDR3Timing = DEFAULT_TIMING, *,
     (``schedule.py``) runs banks whose command streams are identical but
     whose written data differs: one compiled runner, vmapped over
     ``(states, payload_stacks)``.
+
+    ``verify=True`` statically lints the stream before building the
+    runner and raises :class:`~.lint.LintError` on errors (a construction-
+    time gate: cached runners are never rebuilt, so warm calls pay zero).
     """
+    if verify:
+        from . import lint      # lazy: lint is a pure-numpy leaf module
+        src = program.program if hasattr(program, "program") else program
+        report = lint.lint_program(src)
+        if not report.ok:
+            raise lint.LintError(report)
     compiled = _as_compiled(program, cfg)
     if use_kernels is None:
         use_kernels = _default_use_kernels()
@@ -407,11 +418,18 @@ def make_workload_runner(programs, cfg: DDR3Timing = DEFAULT_TIMING, *,
 def execute(program, state: SubarrayState | None = None,
             cfg: DDR3Timing = DEFAULT_TIMING, *,
             use_kernels: bool | None = None,
-            interpret: bool | None = None, refresh: bool = False
-            ) -> ExecResult:
+            interpret: bool | None = None, refresh: bool = False,
+            verify: bool = False) -> ExecResult:
     """Compile (if needed) and run ``program`` against ``state`` (a fresh
     subarray by default). Meter increments accumulate on the incoming
-    ``state.meter``."""
+    ``state.meter``. ``verify=True`` statically lints the stream first
+    and raises :class:`~.lint.LintError` on errors."""
+    if verify:
+        from . import lint
+        src = program.program if hasattr(program, "program") else program
+        report = lint.lint_program(src)
+        if not report.ok:
+            raise lint.LintError(report)
     compiled = _as_compiled(program, cfg)
     if state is None:
         state = make_subarray(compiled.num_rows, compiled.words)

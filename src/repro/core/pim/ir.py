@@ -339,6 +339,15 @@ class PimProgram:
         return out
 
     @property
+    def trace_lines(self) -> tuple[int, ...] | None:
+        """Per-op source line numbers when this program was imported from
+        a pim-trace text (``from_trace_*``), else ``None``. Provenance
+        only — attached outside the dataclass fields so equality, hashing
+        and the columnar digest are unaffected; the lint pass uses it to
+        anchor diagnostics to trace lines."""
+        return getattr(self, "_trace_lines", None)
+
+    @property
     def n_reads(self) -> int:
         return sum(1 for o in self.ops if o.op == OP_READ)
 
@@ -459,6 +468,7 @@ def _parse_trace(text: str):
     num_rows, words, banks, subarrays = NUM_ROWS, ROW_WORDS, 1, 1
     ops: dict[tuple[int, int], list[PimOp]] = {}
     payloads: dict[tuple[int, int], list[np.ndarray]] = {}
+    lines: dict[tuple[int, int], list[int]] = {}
     for lineno, raw in enumerate(text.splitlines(), 1):
         line = raw.split("//")[0].strip()
         if line.startswith("#"):
@@ -510,6 +520,7 @@ def _parse_trace(text: str):
             ops.setdefault(key, []).append(_parse_operands(
                 op, toks, payloads.setdefault(key, []), words, num_rows,
                 banks, subarrays))
+            lines.setdefault(key, []).append(lineno)
         except (IndexError, ValueError) as e:
             msg = "missing operand(s)" if isinstance(e, IndexError) else e
             raise ValueError(
@@ -520,6 +531,10 @@ def _parse_trace(text: str):
                           words=words,
                           payloads=tuple(payloads.get((b, s), ())))
         prog.columns            # warm the columnar encoding + digest once
+        # Trace-line provenance for diagnostics (lint.py); attribute, not
+        # a field, so program equality/digest semantics are untouched.
+        object.__setattr__(prog, "_trace_lines",
+                           tuple(lines.get((b, s), ())))
         return prog
 
     return slot, banks, subarrays
@@ -557,11 +572,20 @@ class ProgramBuilder:
     Ambit composites expand to the identical primitive sequences, so swapping
     ``isa.xxx(state, ...)`` for ``builder.xxx(...)`` records exactly the
     commands the eager path would execute.
+
+    Operand validation matches the trace importers (``_parse_operands``)
+    with op-index provenance: rows must lie in ``[-num_rows, num_rows)``
+    (negative values alias the reserved tail, e.g. ``isa.T0``), SHIFT's
+    delta must be exactly ±1, HOSTW payloads must be ``(words,)`` rows.
+    ``verify=True`` additionally lints the stream at :meth:`build` and
+    raises :class:`~.lint.LintError` on any error-severity diagnostic.
     """
 
-    def __init__(self, num_rows: int = NUM_ROWS, words: int = ROW_WORDS):
+    def __init__(self, num_rows: int = NUM_ROWS, words: int = ROW_WORDS,
+                 *, verify: bool = False):
         self.num_rows = int(num_rows)
         self.words = int(words)
+        self.verify = bool(verify)
         self._ops: list[PimOp] = []
         self._payloads: list[np.ndarray] = []
         self._n_reads = 0
@@ -571,7 +595,16 @@ class ProgramBuilder:
             raise TypeError(
                 f"IR recording needs concrete int row indices, got {type(r)};"
                 " use the eager isa.* path for traced row operands")
-        return int(r) % self.num_rows
+        r = int(r)
+        if not -self.num_rows <= r < self.num_rows:
+            # Same contract the trace importer enforces, with op-index
+            # provenance; negatives down to -num_rows alias the reserved
+            # tail (isa.C0/C1/T0..T3) and resolve modulo num_rows.
+            raise ValueError(
+                f"op {len(self._ops)}: row index {r} out of range "
+                f"[{-self.num_rows}, {self.num_rows}) — negative rows "
+                "alias the reserved control/scratch tail")
+        return r % self.num_rows
 
     def __len__(self) -> int:
         return len(self._ops)
@@ -580,6 +613,11 @@ class ProgramBuilder:
         prog = PimProgram(ops=tuple(self._ops), num_rows=self.num_rows,
                           words=self.words, payloads=tuple(self._payloads))
         prog.columns            # warm the columnar encoding + digest once
+        if self.verify:
+            from . import lint      # lazy: lint imports this module
+            report = lint.lint_program(prog)
+            if not report.ok:
+                raise lint.LintError(report)
         return prog
 
     # -- primitives -----------------------------------------------------------
@@ -632,7 +670,10 @@ class ProgramBuilder:
         return self
 
     def shift(self, src, dst, delta: int = +1) -> "ProgramBuilder":
-        assert delta in (+1, -1), "the migration-cell shift moves exactly 1 bit"
+        if delta not in (+1, -1):
+            raise ValueError(
+                f"op {len(self._ops)}: SHIFT delta must be +1 or -1 "
+                f"(1-bit migration-cell primitive), got {delta:+d}")
         self._ops.append(PimOp(OP_SHIFT, a=self._resolve(src),
                                b=self._resolve(dst), delta=int(delta)))
         return self
@@ -642,7 +683,10 @@ class ProgramBuilder:
         # executor's jit constants and the scheduler's identity-keyed
         # payload cache rely on the recorded data never changing under them
         row = np.array(row, dtype=np.uint32, copy=True)
-        assert row.shape == (self.words,), (row.shape, self.words)
+        if row.shape != (self.words,):
+            raise ValueError(
+                f"op {len(self._ops)}: HOSTW payload shape {row.shape} "
+                f"!= ({self.words},)")
         self._ops.append(PimOp(OP_WRITE, b=self._resolve(dst),
                                payload=len(self._payloads)))
         self._payloads.append(row)
@@ -705,9 +749,11 @@ class ProgramBuilder:
         return self
 
 
-def record(fn, num_rows: int = NUM_ROWS, words: int = ROW_WORDS) -> PimProgram:
-    """Run ``fn(builder)`` and return the recorded program."""
-    b = ProgramBuilder(num_rows, words)
+def record(fn, num_rows: int = NUM_ROWS, words: int = ROW_WORDS, *,
+           verify: bool = False) -> PimProgram:
+    """Run ``fn(builder)`` and return the recorded program. ``verify=True``
+    lints the stream and raises :class:`~.lint.LintError` on errors."""
+    b = ProgramBuilder(num_rows, words, verify=verify)
     fn(b)
     return b.build()
 

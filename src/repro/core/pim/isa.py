@@ -259,7 +259,8 @@ def ambit_not(state: SubarrayState, src, dst,
 
 
 def run_program(state: SubarrayState, program,
-                cfg: DDR3Timing = DEFAULT_TIMING):
+                cfg: DDR3Timing = DEFAULT_TIMING, *,
+                verify: bool = False):
     """Replay a recorded :class:`~.ir.PimProgram` command-at-a-time through
     this eager ISA. Returns ``(state, reads)``.
 
@@ -267,9 +268,16 @@ def run_program(state: SubarrayState, program,
     test_pim_differential.py): one Python-level pytree transition per
     command, no compilation — the compiled executor must match it bit for
     bit. Cross-slot COPYs have no meaning on one subarray and raise.
+    ``verify=True`` statically lints the stream first (see ``lint.py``)
+    and raises :class:`~.lint.LintError` on errors.
     """
     from . import ir
 
+    if verify:
+        from . import lint
+        report = lint.lint_program(program)
+        if not report.ok:
+            raise lint.LintError(report)
     reads = []
     for op in program.ops:
         if op.op == ir.OP_ISSUE:

@@ -65,11 +65,14 @@ def _shift_k_compiled(num_rows: int, words: int, src: int, dst: int, k: int,
 
 @functools.lru_cache(maxsize=256)
 def shift_workload_program(n_shifts: int, num_rows: int = 512,
-                           words: int = 2048) -> PimProgram:
+                           words: int = 2048,
+                           verify: bool = False) -> PimProgram:
     """The recorded Table 2/3 instruction stream: one issue burst, then N
-    chained 1-bit right shifts (row 0 → row 1 → row 1 …)."""
+    chained 1-bit right shifts (row 0 → row 1 → row 1 …). ``verify=True``
+    runs the static verifier on the recorded stream (builder-side gate;
+    errors raise :class:`~.lint.LintError`)."""
     assert n_shifts >= 1, "the workload is defined for at least one shift"
-    b = ProgramBuilder(num_rows, words)
+    b = ProgramBuilder(num_rows, words, verify=verify)
     b.issue()
     b.shift_k(0, 1, n_shifts)
     return b.build()

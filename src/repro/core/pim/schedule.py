@@ -445,6 +445,11 @@ class _StepPlan:
     copy: "_CopyDrainPlan | None"
     group_n_reads: tuple = ()   # per group: HOSTR count of the rep stream
     group_n_payloads: tuple = ()  # per group: HOSTW payload count
+    # Static diagnostics of this layout (lint._plan_diagnostics), computed
+    # ONCE at plan build: the verify=True gates of schedule()/
+    # schedule_pipeline()/schedule_workload() only scan this cached tuple,
+    # so warm paths pay zero extra work.
+    lint: tuple = ()
 
 
 _plan_cache: dict = {}
@@ -601,6 +606,9 @@ def _plan_for(cfg: DeviceConfig, stripped, groups, deferred, *,
                                issue_bus + host_bus, chan_busy0, host_ch,
                                copy_plan, copy_moves, copy_independent,
                                async_host)
+    from . import lint as pim_lint      # lazy: lint imports this module
+    plan_lint = pim_lint._plan_diagnostics(cfg, stripped, groups, deferred,
+                                           async_host)
     plan = _StepPlan(
         fn=fn,
         raw_fn=raw_fn,
@@ -612,11 +620,24 @@ def _plan_for(cfg: DeviceConfig, stripped, groups, deferred, *,
         host_bytes=host_bytes,
         copy=copy_plan,
         group_n_reads=tuple(group_n_reads),
-        group_n_payloads=tuple(group_n_pay))
+        group_n_payloads=tuple(group_n_pay),
+        lint=plan_lint)
     if len(_plan_cache) >= _PLAN_CACHE_MAX:
         _plan_cache.pop(next(iter(_plan_cache)))
     _plan_cache[plan_key] = plan
     return plan
+
+
+def _verify_plans(plans, what: str) -> None:
+    """The ``verify=True`` gate: raise LintError when any plan in ``plans``
+    carries error-severity diagnostics. Scans cached tuples only — no
+    analysis runs here."""
+    if all(not plan.lint for plan in plans):
+        return
+    from . import lint as pim_lint
+    diags = tuple(d for plan in plans for d in plan.lint)
+    if any(d.severity == pim_lint.ERROR for d in diags):
+        raise pim_lint.LintError(pim_lint.LintReport(diags), what)
 
 
 def _lower_step(cfg: DeviceConfig, programs):
@@ -677,7 +698,8 @@ def schedule(device: DeviceState,
              use_kernels: bool | None = None,
              interpret: bool | None = None,
              refresh: bool = False,
-             async_host: bool = False) -> ScheduleResult:
+             async_host: bool = False,
+             verify: bool = False) -> ScheduleResult:
     """Run one program per slot (``None`` = idle slot) and fold the device
     timing model over the per-slot meters.
 
@@ -709,6 +731,8 @@ def schedule(device: DeviceState,
     plan = _plan_for(cfg, stripped, groups, deferred,
                      use_kernels=use_kernels, interpret=interpret,
                      refresh=refresh, async_host=async_host)
+    if verify:
+        _verify_plans((plan,), "schedule layout")
     payloads = tuple(
         _payload_stack([stripped[k] for k in slots], cfg.words)
         for slots in plan.group_slots)
@@ -860,7 +884,8 @@ def schedule_pipeline(device: DeviceState, steps, *,
                       interpret: bool | None = None,
                       refresh: bool = False,
                       async_host: bool = False,
-                      donate: bool = False) -> PipelineResult:
+                      donate: bool = False,
+                      verify: bool = False) -> PipelineResult:
     """Run K recurring schedule steps as ONE ``jax.lax.scan`` dispatch.
 
     ``steps`` is either a sequence of K per-step program layouts (anything
@@ -895,6 +920,8 @@ def schedule_pipeline(device: DeviceState, steps, *,
     plan = _plan_for(cfg, stripped0, groups0, deferred0,
                      use_kernels=use_kernels, interpret=interpret,
                      refresh=refresh, async_host=async_host)
+    if verify:
+        _verify_plans((plan,), "pipeline layout")
     xs = tuple(
         _stack_step_payloads(
             [_payload_stack([flats[k][s] for s in slots], cfg.words)
@@ -1237,7 +1264,8 @@ def schedule_workload(device: DeviceState, phases, *,
                       interpret: bool | None = None,
                       refresh: bool = False,
                       async_host: bool = False,
-                      donate: bool = False) -> WorkloadResult:
+                      donate: bool = False,
+                      verify: bool = False) -> WorkloadResult:
     """Run a HETEROGENEOUS multi-phase workload as ONE XLA dispatch.
 
     ``phases`` is a sequence of phase descriptors (:class:`Phase`, a
@@ -1279,6 +1307,8 @@ def schedule_workload(device: DeviceState, phases, *,
                     (async_host if ph.async_host is None
                      else bool(ph.async_host)) == ah
                     for ph, (st, ah) in zip(phase_list, steps_refs)):
+                if verify:
+                    _verify_plans(wplan_c.phases, "workload layout")
                 return _run_segmented(device, wplan_c, xs_c, fn_c)
 
     plans, flats_p, keys, a_hs = [], [], [], []
@@ -1331,6 +1361,8 @@ def schedule_workload(device: DeviceState, phases, *,
                 hashlib.blake2b(repr(k).encode(), digest_size=16).digest()
                 for k in keys))
     _workload_plan_cache[wkey] = wplan
+    if verify:
+        _verify_plans(wplan.phases, "workload layout")
 
     if order is None:
         xs_phases = tuple(

@@ -1,7 +1,20 @@
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_pim_stats():
+    """Zero the pim instrumentation counters (COLUMN_STATS / SCHED_STATS /
+    RUNNER_STATS) before every test so stats-asserting tests are
+    order-independent — any test may touch the cached schedule paths."""
+    import repro.core.pim as pim
+
+    pim.reset_stats()
+    yield
 
 try:  # hypothesis is optional: clean environments still run the example tests
     from hypothesis import settings, HealthCheck

@@ -97,6 +97,12 @@ def _fresh():
 
 
 def _assert_agree(prog, refresh=False):
+    # static-verifier leg: generated programs draw operands from the user
+    # range with TRA operands distinct, so the linter must find no ERRORs
+    # (uninitialized-read warnings are expected — streams may read rows
+    # the host never wrote)
+    assert pim.lint_program(prog).ok, pim.lint_program(prog).render()
+
     # columnar cost pass leg: the vectorized template gather must equal the
     # per-op reference loop row-for-row (same float32 bit patterns)
     f_vec, i_vec = pim.cost_tables(prog)

@@ -1,0 +1,476 @@
+"""pimlint: the static verifier + hazard analyzer (DESIGN.md §12).
+
+Covers the three entry points (``lint_program`` / ``lint_schedule`` /
+``lint_trace``), the golden known-bad fixtures under
+``tests/fixtures/lint/``, the opt-in ``verify=True`` gates across the
+builder/compiler/executor/scheduler, the unified builder-vs-importer
+operand validation, and the cost contracts: vectorized O(n_ops) speed and
+ZERO extra work on warm schedule paths.
+
+Hypothesis is optional (conftest registers the profiles); without it a
+deterministic seed sweep drives the same generators.
+"""
+import glob
+import importlib
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # offline fallback: deterministic seed sweep below
+    HAVE_HYPOTHESIS = False
+
+from repro.core import pim
+from repro.core.pim import exec as pim_exec
+from repro.core.pim import ir
+from repro.core.pim import lint
+from test_pim_differential import _build_program
+
+# the package re-exports a `schedule` FUNCTION; the module needs importlib
+pim_schedule = importlib.import_module("repro.core.pim.schedule")
+
+ROWS = 16
+WORDS = 2
+FIXDIR = os.path.join(os.path.dirname(__file__), "fixtures", "lint")
+
+
+def _b(rows=ROWS, words=WORDS, **kw):
+    return pim.ProgramBuilder(rows, words, **kw)
+
+
+def _raw(ops, rows=ROWS, words=WORDS, payloads=()):
+    """Hand-assembled program bypassing the builder's validation — the only
+    way to express PIM101/102/105-class streams (builder and trace importer
+    both reject them at construction)."""
+    return ir.PimProgram(ops=tuple(ops), num_rows=rows, words=words,
+                         payloads=tuple(payloads))
+
+
+# ---------------------------------------------------------------------------
+# Golden fixtures: every seeded-hazard trace flags its code, clean is clean
+# ---------------------------------------------------------------------------
+
+FIXTURES = sorted(glob.glob(os.path.join(FIXDIR, "*.trace")))
+# fixture name -> op index the diagnostic must anchor to (trace op order)
+EXPECT_OP = {"pim103": 0, "pim104": 5, "pim106": 1, "pim201": 0,
+             "pim202": 0, "pim203": 1, "pim204": 1, "pim301": 1,
+             "pim302": 3, "pim303": 0}
+
+
+def test_fixture_dir_is_populated():
+    names = {os.path.basename(p) for p in FIXTURES}
+    assert {f"pim{c}.trace" for c in
+            (103, 104, 106, 201, 202, 203, 204, 301, 302, 303)} <= names
+    assert "clean_maj.trace" in names
+
+
+@pytest.mark.parametrize("path", FIXTURES,
+                         ids=[os.path.basename(p) for p in FIXTURES])
+def test_fixture_flags_expected_code_at_expected_op(path):
+    with open(path) as f:
+        text = f.read()
+    directives = lint._trace_directives(text)
+    banks = int(directives["banks"]) if "banks" in directives else None
+    report = lint.lint_trace(text, banks=banks)
+    name = os.path.basename(path).removesuffix(".trace")
+    if "expect" not in directives:
+        assert report.diagnostics == (), report.render()
+        return
+    code = directives["expect"]
+    hits = [d for d in report.diagnostics if d.code == code]
+    assert hits, f"{name}: {code} not in {report.codes()}"
+    assert any(d.op_index == EXPECT_OP[name] for d in hits), \
+        (name, [(d.code, d.op_index) for d in hits])
+    # severity agrees with the catalog
+    for d in hits:
+        assert d.severity == lint.CATALOG[code][0]
+
+
+def test_fixture_diagnostics_carry_trace_line_provenance():
+    path = os.path.join(FIXDIR, "pim104.trace")
+    with open(path) as f:
+        text = f.read()
+    report = lint.lint_trace(text)
+    hit = next(d for d in report.diagnostics if d.code == "PIM104")
+    # the flagged op (op 5) sits on the trace's 11th physical line
+    assert hit.trace_line == 11
+    assert f"line {hit.trace_line}" in hit.render()
+
+
+# ---------------------------------------------------------------------------
+# Program-level codes not expressible as traces (importer/builder reject)
+# ---------------------------------------------------------------------------
+
+def test_pim101_row_out_of_range():
+    prog = _raw([ir.PimOp(ir.OP_ROWCLONE, a=3, b=ROWS + 2)])
+    report = lint.lint_program(prog)
+    assert "PIM101" in report.codes()
+    d = next(d for d in report.diagnostics if d.code == "PIM101")
+    assert d.op_index == 0 and d.severity == lint.ERROR
+
+
+def test_pim102_shift_delta():
+    prog = _raw([ir.PimOp(ir.OP_SHIFT, a=0, b=1, delta=3)])
+    report = lint.lint_program(prog)
+    assert "PIM102" in report.codes()
+    assert not report.ok
+
+
+def test_pim105_payload_out_of_range_and_bad_shape():
+    missing = _raw([ir.PimOp(ir.OP_WRITE, b=0, payload=4)])
+    assert "PIM105" in lint.lint_program(missing).codes()
+    bad_shape = _raw(
+        [ir.PimOp(ir.OP_WRITE, b=0, payload=0)],
+        payloads=[np.zeros(WORDS + 1, dtype=np.uint32)])
+    assert "PIM105" in lint.lint_program(bad_shape).codes()
+
+
+def test_pim205_unused_payload_is_warning_only():
+    prog = _raw([ir.PimOp(ir.OP_WRITE, b=0, payload=0)],
+                payloads=[np.zeros(WORDS, dtype=np.uint32),
+                          np.ones(WORDS, dtype=np.uint32)])
+    report = lint.lint_program(prog)
+    assert "PIM205" in report.codes()
+    assert report.ok          # warnings never fail verification
+
+
+def test_pim106_clobber_without_read_is_warning():
+    b = _b()
+    b.fill(pim.C0, 0)
+    b.rowclone(0, pim.C0)     # dirty C0, but nothing reads it afterwards
+    report = lint.lint_program(b.build())
+    d = next(d for d in report.diagnostics if d.code == "PIM106")
+    assert d.severity == lint.WARNING and report.ok
+
+
+def test_pim305_shape_mismatch_schedule():
+    cfg = pim.paper_device(2, num_rows=32, words=8)
+    wrong = _b(rows=16, words=8)
+    wrong.issue()
+    report = pim.lint_schedule(cfg, [wrong.build(), None])
+    assert "PIM305" in report.codes()
+    assert not report.ok
+
+
+def test_pim304_async_host_window(monkeypatch):
+    cfg = pim.paper_device(2, num_rows=32, words=8)
+    heavy = _b(rows=32, words=8)        # host-dominated: writes, no compute
+    rng = np.random.default_rng(0)
+    for r in range(8):
+        heavy.write_row(r, rng.integers(0, 2**32, 8, dtype=np.uint32))
+    light = _b(rows=32, words=8)
+    light.issue()
+    report = pim.lint_schedule(cfg, [heavy.build(), light.build()],
+                               async_host=True)
+    assert "PIM304" in report.codes()
+    # same layout without async host analysis: no PIM304
+    quiet = pim.lint_schedule(cfg, [heavy.build(), light.build()])
+    assert "PIM304" not in quiet.codes()
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: builder and trace importer share validation + provenance
+# ---------------------------------------------------------------------------
+
+def test_builder_rejects_out_of_range_row_with_op_index():
+    b = _b()
+    b.rowclone(0, 1)
+    with pytest.raises(ValueError, match=r"op 1: row index 40"):
+        b.rowclone(40, 1)
+    with pytest.raises(TypeError):
+        b.rowclone(None, 1)
+
+
+def test_builder_negative_rows_still_alias_the_tail():
+    b = _b()
+    b.rowclone(0, pim.T0)
+    assert b._ops[-1].b == ROWS - 3
+    with pytest.raises(ValueError, match="out of range"):
+        b.rowclone(-(ROWS + 1), 0)
+
+
+def test_builder_rejects_bad_shift_delta_and_payload_shape():
+    b = _b()
+    with pytest.raises(ValueError, match=r"op 0: SHIFT delta"):
+        b.shift(0, 1, 2)
+    with pytest.raises(ValueError, match=r"op 0: HOSTW payload shape"):
+        b.write_row(0, np.zeros(WORDS + 3, dtype=np.uint32))
+
+
+def test_importer_errors_carry_line_numbers():
+    text = ("# pim-trace v2 rows=16 words=2 banks=1\n"
+            "BANK 0 AAP 0 1\n"
+            "BANK 0 SHIFT 0 1 +2\n")
+    with pytest.raises(ValueError, match="trace line 3"):
+        ir.from_trace_device(text)
+
+
+def test_importer_attaches_trace_lines():
+    text = ("# pim-trace v2 rows=16 words=2 banks=1\n"
+            "\n"
+            "BANK 0 AAP 0 1\n"
+            "BANK 0 HOSTR 1\n")
+    (prog,), = ir.from_trace_device(text)
+    assert prog.trace_lines == (3, 4)
+    # builder-made programs have no trace provenance
+    b = _b()
+    b.issue()
+    assert b.build().trace_lines is None
+
+
+# ---------------------------------------------------------------------------
+# verify=True gates across the stack
+# ---------------------------------------------------------------------------
+
+def _bad_tra_prog(rows=ROWS, words=WORDS):
+    return _raw([ir.PimOp(ir.OP_TRA, a=3, b=3, c=5)], rows, words)
+
+
+def test_builder_verify_gate():
+    b = _b(verify=True)
+    b.fill(0, 7)
+    b.tra(0, 0, 2)            # PIM103 at build() time
+    with pytest.raises(lint.LintError, match="PIM103"):
+        b.build()
+    ok = _b(verify=True)
+    ok.fill(0, 7)
+    ok.read_row(0)
+    ok.build()                # warnings-only streams pass
+
+
+def test_compile_execute_and_eager_verify_gates():
+    bad = _bad_tra_prog()
+    with pytest.raises(lint.LintError):
+        pim.compile_program(bad, verify=True)
+    with pytest.raises(lint.LintError):
+        pim_exec.execute(bad, pim.make_subarray(ROWS, WORDS), verify=True)
+    with pytest.raises(lint.LintError):
+        pim.run_program(pim.make_subarray(ROWS, WORDS), bad, verify=True)
+    # unverified paths still run the stream (legacy behaviour untouched)
+    pim.run_program(pim.make_subarray(ROWS, WORDS), bad)
+
+
+def test_record_and_vm_thread_verify():
+    with pytest.raises(lint.LintError):
+        ir.record(lambda b: b.tra(0, 0, 2), ROWS, WORDS, verify=True)
+    vm = pytest.importorskip("repro.core.bitplane.vm")
+    v = vm.PimVM(32, num_rows=64, words=4, verify=True)
+    assert v._builder.verify is True
+
+
+def test_schedule_verify_gate_and_clean_pass():
+    cfg = pim.paper_device(2, num_rows=32, words=8)
+    race = _b(rows=32, words=8)
+    race.fill(0, 1)
+    race.copy_row(0, 5, 1, 0)
+    race.copy_row(0, 5, 1, 0)            # PIM302
+    other = _b(rows=32, words=8)
+    other.issue()
+    with pytest.raises(lint.LintError, match="PIM302"):
+        pim.schedule(pim.make_device(cfg), [race.build(), other.build()],
+                     verify=True)
+    clean = _b(rows=32, words=8)
+    clean.fill(0, 1)
+    clean.copy_row(0, 5, 1, 0)
+    res = pim.schedule(pim.make_device(cfg),
+                       [clean.build(), other.build()], verify=True)
+    assert float(res.wall_ns) > 0
+
+
+def test_schedule_workload_verify_gate_covers_fast_path():
+    cfg = pim.paper_device(2, num_rows=32, words=8)
+    race = _b(rows=32, words=8)
+    race.fill(0, 1)
+    race.copy_row(0, 5, 1, 0)
+    race.copy_row(0, 5, 1, 0)
+    other = _b(rows=32, words=8)
+    other.issue()
+    phases = [pim.Phase.repeat([race.build(), other.build()], 2)]
+    with pytest.raises(lint.LintError):
+        pim.schedule_workload(pim.make_device(cfg), phases, verify=True)
+    # warm the cache unverified, then hit the fast path verified: the plan
+    # lint is cached on the plan, so the gate must STILL raise
+    pim.schedule_workload(pim.make_device(cfg), phases)
+    with pytest.raises(lint.LintError):
+        pim.schedule_workload(pim.make_device(cfg), phases, verify=True)
+
+
+# ---------------------------------------------------------------------------
+# Zero warm-path cost: plan lint rides the plan cache
+# ---------------------------------------------------------------------------
+
+def test_verified_warm_schedule_adds_no_work():
+    cfg = pim.paper_device(2, num_rows=32, words=8)
+    rng = np.random.default_rng(3)
+    progs = []
+    for _ in range(cfg.n_slots):
+        b = _b(rows=32, words=8)
+        b.issue()
+        b.write_row(0, rng.integers(0, 2**32, 8, dtype=np.uint32))
+        b.shift(0, 1, +1)
+        b.read_row(1)
+        progs.append(b.build())
+    res = pim.schedule(pim.make_device(cfg), progs, verify=True)  # warm
+    pim.reset_stats()
+    for _ in range(3):
+        res = pim.schedule(res.state, progs, verify=True)
+    assert pim_schedule.SCHED_STATS["dispatches"] == 3
+    assert pim_schedule.SCHED_STATS["plan_misses"] == 0
+    assert pim_schedule.SCHED_STATS["compile_misses"] == 0
+    assert ir.COLUMN_STATS["builds"] == 0
+    assert pim_exec.RUNNER_STATS["traces"] == 0
+
+
+def test_lint_program_results_are_cached(monkeypatch):
+    b = _b()
+    b.fill(0, 7)
+    b.read_row(0)
+    prog = b.build()
+    r1 = lint.lint_program(prog)
+    monkeypatch.setattr(lint, "_lint_columns",
+                        lambda *a, **k: pytest.fail("cache miss: "
+                                                    "_lint_columns re-ran"))
+    r2 = lint.lint_program(prog)
+    assert r2.diagnostics == r1.diagnostics
+    # an identical stream rebuilt from scratch hits the digest-keyed cache
+    b2 = _b()
+    b2.fill(0, 7)
+    b2.read_row(0)
+    assert lint.lint_program(b2.build()).diagnostics == r1.diagnostics
+
+
+# ---------------------------------------------------------------------------
+# Generated streams: valid programs lint error-free, injected hazards don't
+# ---------------------------------------------------------------------------
+
+def _assert_clean(seed, n_ops):
+    prog = _build_program(np.random.default_rng(seed), n_ops)
+    report = lint.lint_program(prog)
+    assert report.ok, report.render()
+
+
+def _assert_injected_hazard_flagged(seed, n_ops):
+    prog = _build_program(np.random.default_rng(seed), n_ops)
+    rows = prog.num_rows
+    bad = ir.PimProgram(
+        ops=prog.ops + (ir.PimOp(ir.OP_TRA, a=1, b=1, c=2),),
+        num_rows=rows, words=prog.words, payloads=prog.payloads)
+    report = lint.lint_program(bad)
+    assert "PIM103" in report.codes()
+    d = next(x for x in report.diagnostics if x.code == "PIM103")
+    assert d.op_index == len(prog.ops)
+
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 2**32 - 1), n_ops=st.integers(1, 24))
+    def test_generated_programs_lint_clean(seed, n_ops):
+        _assert_clean(seed, n_ops)
+
+    @given(seed=st.integers(0, 2**32 - 1), n_ops=st.integers(1, 16))
+    def test_injected_hazard_always_flagged(seed, n_ops):
+        _assert_injected_hazard_flagged(seed, n_ops)
+else:
+    @pytest.mark.parametrize("seed", range(0, 40))
+    def test_generated_programs_lint_clean(seed):
+        _assert_clean(seed, 1 + seed % 24)
+
+    @pytest.mark.parametrize("seed", range(40, 60))
+    def test_injected_hazard_always_flagged(seed):
+        _assert_injected_hazard_flagged(seed, 1 + seed % 16)
+
+
+def test_buggy_pr1_xor_expansion_is_flagged_but_current_isnt():
+    # the current (fixed) ambit_xor composite must be clean...
+    b = _b()
+    b.fill(pim.C0, 0)
+    b.fill(pim.C1, 0xFFFFFFFF)
+    b.write_row(0, np.zeros(WORDS, dtype=np.uint32))
+    b.write_row(1, np.ones(WORDS, dtype=np.uint32))
+    b.ambit_xor(0, 1, 2)
+    b.read_row(2)
+    assert lint.lint_program(b.build()).ok
+    # ...and the builder itself refuses scratch operands (PR-1's bug)
+    with pytest.raises(ValueError, match="scratch"):
+        b2 = _b()
+        b2.ambit_xor(pim.T0, 1, 2)
+
+
+def test_benchmark_workloads_lint_clean():
+    for name, report in lint._workload_reports():
+        assert report.ok, (name, report.render())
+
+
+# ---------------------------------------------------------------------------
+# Performance: vectorized O(n_ops), fast enough for CI gating
+# ---------------------------------------------------------------------------
+
+def test_lint_100k_ops_under_a_second():
+    n = 100_000
+    rng = np.random.default_rng(0)
+    b = pim.ProgramBuilder(64, 4)
+    b.fill(pim.C0, 0)
+    srcs = rng.integers(0, 32, n)
+    dsts = rng.integers(0, 32, n)
+    for s, d in zip(srcs, dsts):
+        b.rowclone(int(s), int(d))
+    b.tra(1, 1, 2)                       # one seeded hazard at the tail
+    prog = b.build()                     # build outside the timed region
+    prog.columns                         # columnar encode also untimed
+    t0 = time.perf_counter()
+    report = lint.lint_program(prog)
+    dt = time.perf_counter() - t0
+    assert "PIM103" in report.codes()
+    assert dt < 1.0, f"lint took {dt:.2f}s for {n} ops"
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_fixtures_and_json_report(tmp_path, capsys):
+    out = tmp_path / "report.json"
+    rc = lint.main(FIXTURES + ["--json", str(out)])
+    assert rc == 0
+    payload = json.loads(out.read_text())
+    assert any(k.endswith("clean_maj.trace") for k in payload)
+    bad = next(v for k, v in payload.items() if k.endswith("pim103.trace"))
+    assert any(d["code"] == "PIM103" for d in bad["diagnostics"])
+    capsys.readouterr()
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    # a failing trace without an expect directive -> exit 1
+    t = tmp_path / "bad.trace"
+    t.write_text("# pim-trace v2 rows=16 words=2 banks=1\n"
+                 "BANK 0 TRA 3 3 5\n")
+    assert lint.main([str(t)]) == 1
+    # clean trace, but --strict turns warnings into failures
+    w = tmp_path / "warn.trace"
+    w.write_text("# pim-trace v2 rows=16 words=2 banks=1\n"
+                 "BANK 0 HOSTR 2\n")
+    assert lint.main([str(w)]) == 0
+    assert lint.main([str(w), "--strict"]) == 1
+    # unparseable trace is a PARSE diagnostic, not a traceback
+    p = tmp_path / "parse.trace"
+    p.write_text("# pim-trace v2 rows=16 words=2 banks=1\n"
+                 "BANK 0 FROB 1 2\n")
+    assert lint.main([str(p)]) == 1
+    # no inputs -> usage error
+    assert lint.main([]) == 2
+    capsys.readouterr()
+
+
+def test_cli_workloads_leg(capsys):
+    assert lint.main(["--workloads"]) == 0
+    capsys.readouterr()
+
+
+def test_catalog_is_consistent():
+    for code, (sev, title, why) in lint.CATALOG.items():
+        assert sev in (lint.ERROR, lint.WARNING)
+        assert code.startswith("PIM") and title and why

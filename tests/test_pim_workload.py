@@ -36,10 +36,9 @@ def _cfg(channels=1, ranks=1, banks_per_rank=4):
                             num_rows=ROWS, words=WORDS)
 
 
-def _reset_stats():
-    pim_schedule.SCHED_STATS.update(dispatches=0, plan_misses=0,
-                                    compile_misses=0)
-    pim_exec.RUNNER_STATS["traces"] = 0
+# Mid-test counter resets (post-warm) go through the shared helper; the
+# autouse conftest fixture already zeroes everything per-test.
+_reset_stats = pim.reset_stats
 
 
 def _compute_prog(data, k=4):
