@@ -11,13 +11,15 @@ test:
 
 # Kernel micro-bench in interpret mode + eager-vs-compiled executor
 # comparison + the channel-overlap roofline report + the host-side
-# scheduler/orchestration bench; writes the bench-trajectory JSONs next
-# to the repo.
+# scheduler/orchestration bench + the multi-tenant serving bench (grid,
+# isolation, churn, hostile-admission legs); writes the bench-trajectory
+# JSONs next to the repo.
 bench-smoke:
 	$(PYTHON) -m benchmarks.kernel_bench kernel_bench.json
 	$(PYTHON) -m benchmarks.trace_replay
 	$(PYTHON) -m benchmarks.roofline_report roofline_channels.json
 	$(PYTHON) -m benchmarks.scheduler_bench scheduler_bench.json
+	$(PYTHON) -m benchmarks.serve_bench serve_bench.json
 
 # Syntax/bytecode check everywhere; upgrade to pyflakes when present.
 lint:

@@ -1,0 +1,279 @@
+"""Multi-tenant serving front-end benchmark (``serve_bench.json``).
+
+Measures the request-level serving path (``repro.serve.pim_front``,
+DESIGN.md §13) on one shared device:
+
+  * ``grid``            — tenants x steps sweep: steady-state steps/s,
+    XLA dispatches per device step (the continuous-batching loop rides
+    ``schedule_pipeline``, so recurring windows cost << 1 dispatch/step),
+    the cross-tenant coalescing factor (active slots per compiled stream
+    group — N tenants on one digest coalesce to ~N), per-tenant energy,
+    and per-tenant p50/p99 step latency from the sliced per-slot meters.
+  * ``isolation``       — the bit-exactness bar: every tenant's host
+    reads and final bank state under the coalesced schedule vs the same
+    tenant running ALONE on a private device slice.
+  * ``churn``           — admission/preemption behaviour: staggered
+    tenant lengths plus queued arrivals admitted at step boundaries, and
+    the warm-plan contract (plan misses stay bounded by the number of
+    distinct layouts, not the number of membership changes).
+  * ``hostile_admission`` — the admission gate: a known-bad program (the
+    pim104 scratch-alias fixture) must be REJECTED at submit() with lint
+    diagnostics — not admitted, not a crash.
+
+Host wall times are whatever machine runs the bench (CPU in CI); the
+meaningful numbers are the ratios and the dispatch/coalescing counters.
+"""
+import importlib
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import pim
+from repro.serve.pim_front import AdmissionError, PimServeFront
+
+pim_schedule = importlib.import_module("repro.core.pim.schedule")
+
+BANKS = 16
+ROWS, WORDS = 32, 8
+STEPS = 40
+BANKS_PER_TENANT = 2
+HOSTILE_FIXTURE = "tests/fixtures/lint/pim104.trace"
+
+
+def _cfg(banks=BANKS):
+    return pim.paper_device(banks, num_rows=ROWS, words=WORDS)
+
+
+def _stream(rng):
+    """The paper's streaming step: load a row, 40-shift chain, read back."""
+    b = pim.ProgramBuilder(ROWS, WORDS)
+    b.issue()
+    b.write_row(0, rng.integers(0, 2**32, (WORDS,), dtype=np.uint32))
+    b.shift_k(0, 1, 40)
+    b.read_row(1)
+    return b.build()
+
+
+def _submit_all(front, n_tenants, rng, steps=STEPS,
+                banks=BANKS_PER_TENANT):
+    """N tenants, every one the same command stream over private data —
+    the digest-coalescing steady state."""
+    base = _stream(rng)
+    for i in range(n_tenants):
+        layout = [base.with_payloads(
+            [rng.integers(0, 2**32, (WORDS,), dtype=np.uint32)])
+            for _ in range(banks)]
+        front.submit(f"tenant{i}", (layout, steps), banks=banks)
+
+
+def bench_grid(report=print, reps=2):
+    rng = np.random.default_rng(0)
+    stats = pim_schedule.SCHED_STATS
+    cells = []
+    for n_tenants in (1, 2, 4, 8):
+        best_s, cell = float("inf"), None
+        for _ in range(reps):            # rep 1 pays the compiles
+            front = PimServeFront(_cfg())
+            _submit_all(front, n_tenants, rng)
+            d0 = stats["dispatches"]
+            t0 = time.perf_counter()
+            results = front.run()
+            jax.block_until_ready(front.device.banks.bits)
+            dt = time.perf_counter() - t0
+            n_steps = sum(r.n_steps for r in results)
+            if dt < best_s:
+                best_s = dt
+                reports = front.reports()
+                walls = np.concatenate(
+                    [r.wall_ns for r in reports.values()])
+                cell = {
+                    "tenants": n_tenants,
+                    "steps_per_tenant": STEPS,
+                    "banks_per_tenant": BANKS_PER_TENANT,
+                    "device_steps": n_steps,
+                    "steps_per_s": n_steps / dt,
+                    "dispatches_per_step":
+                        (stats["dispatches"] - d0) / n_steps,
+                    "coalescing_factor": float(np.mean(
+                        [r.coalescing for r in results])),
+                    "per_tenant_energy_nj": float(np.mean(
+                        [r.energy_nj for r in reports.values()])),
+                    "p50_step_wall_ns": float(np.percentile(walls, 50)),
+                    "p99_step_wall_ns": float(np.percentile(walls, 99)),
+                }
+        report(f"grid {n_tenants:2d} tenants: "
+               f"{cell['steps_per_s']:8.1f} steps/s  "
+               f"{cell['dispatches_per_step']:.3f} disp/step  "
+               f"coalescing {cell['coalescing_factor']:.1f}  "
+               f"{cell['per_tenant_energy_nj']:.0f} nJ/tenant  "
+               f"p50 {cell['p50_step_wall_ns']:.0f} ns  "
+               f"p99 {cell['p99_step_wall_ns']:.0f} ns")
+        cells.append(cell)
+    return {"grid": cells}
+
+
+def bench_isolation(report=print, n_tenants=4, steps=10):
+    """Bit-exactness of the coalesced schedule vs isolated tenants."""
+    rng = np.random.default_rng(1)
+    cfg = _cfg()
+    front = PimServeFront(cfg)
+    base = _stream(rng)
+    workloads = {}
+    for i in range(n_tenants):
+        tid = f"tenant{i}"
+        layout = [base.with_payloads(
+            [rng.integers(0, 2**32, (WORDS,), dtype=np.uint32)])
+            for _ in range(BANKS_PER_TENANT)]
+        workloads[tid] = [list(layout) for _ in range(steps)]
+        front.submit(tid, (layout, steps), banks=BANKS_PER_TENANT)
+    placements = front.placement()
+    reads_front = {tid: [] for tid in workloads}
+    coalescing = []
+    for res in front.run():
+        coalescing.append(res.coalescing)
+        for tid in res.placements:
+            got = res.tenant_reads(tid)
+            reads_front[tid].extend(got if res.n_steps > 1 else [got])
+    shared_bits = np.asarray(front.device.banks.bits)
+
+    bit_exact = True
+    for tid, tsteps in workloads.items():
+        dev = pim.make_device(cfg.subdevice(BANKS_PER_TENANT))
+        reads_iso = []
+        for s in tsteps:
+            r = pim.schedule(dev, s)
+            dev = r.state
+            reads_iso.append(r.reads)
+        banks = list(placements[tid].banks)
+        if not np.array_equal(shared_bits[banks],
+                              np.asarray(dev.banks.bits)):
+            bit_exact = False
+        for k in range(steps):
+            for sl in range(BANKS_PER_TENANT):
+                for x, y in zip(reads_front[tid][k][sl], reads_iso[k][sl]):
+                    if not np.array_equal(np.asarray(x), np.asarray(y)):
+                        bit_exact = False
+    rec = front.reconcile()
+    reconciled = (abs(rec["tenant_energy_nj"] - rec["device_energy_nj"])
+                  <= 1e-9 * abs(rec["device_energy_nj"])
+                  and rec["tenant_host_bytes"] == rec["device_host_bytes"])
+    report(f"isolation: bit_exact={bit_exact} "
+           f"coalescing {float(np.mean(coalescing)):.1f} "
+           f"accounting_reconciles={reconciled}")
+    if not bit_exact or not reconciled:
+        raise SystemExit("isolation gate FAILED: "
+                         f"bit_exact={bit_exact} reconciled={reconciled}")
+    return {"isolation": {
+        "tenants": n_tenants, "steps": steps,
+        "bit_exact_vs_isolated": bool(bit_exact),
+        "coalescing_factor": float(np.mean(coalescing)),
+        "accounting_reconciles": bool(reconciled),
+        "tenant_energy_nj_sum": rec["tenant_energy_nj"],
+        "device_energy_nj": rec["device_energy_nj"],
+    }}
+
+
+def bench_churn(report=print):
+    """Continuous batching under churn: staggered lengths + queued
+    arrivals; plan misses bounded by distinct layouts."""
+    rng = np.random.default_rng(2)
+    stats = pim_schedule.SCHED_STATS
+    front = PimServeFront(_cfg(banks=8))
+    base = _stream(rng)
+
+    def layout(nb):
+        return [base.with_payloads(
+            [rng.integers(0, 2**32, (WORDS,), dtype=np.uint32)])
+            for _ in range(nb)]
+
+    front.submit("long", (layout(4), 60), banks=4)
+    front.submit("short", (layout(4), 15), banks=4)
+    front.submit("late1", (layout(4), 20), banks=4, queue=True)
+    front.submit("late2", (layout(2), 10), banks=2, queue=True)
+    d0, p0 = stats["dispatches"], stats["plan_misses"]
+    t0 = time.perf_counter()
+    results = front.run()
+    jax.block_until_ready(front.device.banks.bits)
+    dt = time.perf_counter() - t0
+    n_steps = sum(r.n_steps for r in results)
+    served = front.reports()
+    rec = front.reconcile()
+    out = {
+        "tenants_served": len(served),
+        "device_steps": n_steps,
+        "dispatches": stats["dispatches"] - d0,
+        "dispatches_per_step": (stats["dispatches"] - d0) / n_steps,
+        "plan_misses": stats["plan_misses"] - p0,
+        "steps_per_s": n_steps / dt,
+        "per_tenant_steps": {t: r.n_steps for t, r in served.items()},
+        "accounting_reconciles": bool(
+            abs(rec["tenant_busy_ns"] - rec["device_busy_ns"])
+            <= 1e-9 * max(1.0, abs(rec["device_busy_ns"]))),
+    }
+    report(f"churn: {out['tenants_served']} tenants, "
+           f"{n_steps} steps, {out['dispatches']} dispatches, "
+           f"{out['plan_misses']} plan misses, "
+           f"{out['steps_per_s']:.1f} steps/s")
+    return {"churn": out}
+
+
+def bench_hostile_admission(report=print):
+    """The admission gate on a known-bad tenant: rejection with
+    diagnostics, never a crash of the shared device."""
+    bad = pim.PimProgram.from_trace(open(HOSTILE_FIXTURE).read())
+    cfg = pim.DeviceConfig(channels=1, ranks=1, banks_per_rank=2,
+                           num_rows=bad.num_rows, words=bad.words)
+    front = PimServeFront(cfg)
+    rejected, codes, crashed = False, (), False
+    try:
+        front.submit("hostile", (bad, 4), banks=1)
+    except AdmissionError as e:
+        rejected = True
+        codes = e.report.codes() if e.report else ()
+    except Exception:           # a crash would fail the acceptance bar
+        crashed = True
+    # the shared device still serves well-behaved tenants afterwards
+    b = pim.ProgramBuilder(bad.num_rows, bad.words)
+    b.write_row(2, np.zeros(bad.words, np.uint32))
+    b.read_row(2)
+    front.submit("good", (b.build(), 2), banks=1)
+    front.run()
+    survived = front.report("good").n_steps == 2
+    report(f"hostile admission: rejected={rejected} codes={list(codes)} "
+           f"crashed={crashed} device_survived={survived}")
+    # CI gate: the bad tenant must be REJECTED with diagnostics — an
+    # admission, a crash, or a disturbed device fails the bench run.
+    if not rejected or crashed or not survived:
+        raise SystemExit("hostile-admission gate FAILED: "
+                         f"rejected={rejected} crashed={crashed} "
+                         f"survived={survived}")
+    return {"hostile_admission": {
+        "fixture": HOSTILE_FIXTURE,
+        "rejected": rejected,
+        "lint_codes": sorted(set(codes)),
+        "crashed": crashed,
+        "device_survived": survived,
+    }}
+
+
+def run(report=print, json_path=None):
+    out = {"banks": BANKS, "rows": ROWS, "words": WORDS}
+    out.update(bench_grid(report))
+    out.update(bench_isolation(report))
+    out.update(bench_churn(report))
+    out.update(bench_hostile_admission(report))
+    blob = json.dumps(out, indent=2, sort_keys=True)
+    if json_path:
+        with open(json_path, "w") as f:
+            f.write(blob + "\n")
+        report(f"wrote {json_path}")
+    else:
+        report(blob)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(json_path=sys.argv[1] if len(sys.argv) > 1 else None)

@@ -94,6 +94,24 @@ class DeviceConfig:
         assert 0 <= slot < self.n_slots, slot
         return divmod(slot, self.subarrays)
 
+    def bank_slots(self, banks) -> tuple[int, ...]:
+        """Flat slot indices of every subarray of the given banks, in
+        (bank, subarray) order — the serving layer's placement unit."""
+        return tuple(self.slot_index(b, s) for b in banks
+                     for s in range(self.subarrays))
+
+    def subdevice(self, n_banks: int) -> "DeviceConfig":
+        """A private single-channel slice of this device: ``n_banks`` banks
+        with the same subarray geometry and timing. Per-slot state and
+        meters are layout-independent, so a tenant scheduled alone on its
+        subdevice is bit-exact against the same programs running on its
+        slots of the shared device (the multi-tenant differential leg)."""
+        if not 0 < n_banks <= self.n_banks:
+            raise ValueError(
+                f"subdevice of {n_banks} banks from {self.n_banks}")
+        return dataclasses.replace(self, channels=1, ranks=1,
+                                   banks_per_rank=n_banks)
+
 
 # §5.1.4 device sizes used throughout benchmarks: 1, 8 (one rank), 32 (all).
 def paper_device(n_banks: int, num_rows: int = NUM_ROWS,
@@ -156,6 +174,21 @@ class DeviceState:
         i = self.config.slot_index(b, 0)
         return jax.tree_util.tree_map(
             lambda x: x[i:i + self.config.subarrays], self.banks)
+
+    @property
+    def slot_time_ns(self) -> jax.Array:
+        """(n_slots,) cumulative per-slot busy time — lazy (stays on
+        device). Meters are cumulative and slots are exclusively owned, so
+        a tenant's busy time over any window is the difference of two
+        snapshots of this array sliced at its slots."""
+        return self.banks.meter.time_ns
+
+    @property
+    def slot_energy_nj(self) -> jax.Array:
+        """(n_slots,) cumulative per-slot energy — lazy. Summing slices
+        over a slot partition reconciles exactly with the device totals
+        (the scheduler's ``energy_nj`` is the same array, summed)."""
+        return self.banks.meter.total_energy_nj
 
     def with_banks(self, banks: SubarrayState,
                    host_credit_ns=None) -> "DeviceState":

@@ -216,9 +216,56 @@ def compiled_for(program: PimProgram,
 # over and over, and re-np.stack-ing identical host data plus re-uploading
 # it to the device every step was pure waste. Cache values hold references
 # to the source arrays, pinning their ids for the lifetime of the entry
-# (so a recycled id can never alias a dead key). LRU-bounded.
+# (so a recycled id can never alias a dead key). Bounded by entry count
+# AND by pinned bytes: the "multi" pipeline entries hold K-times-stacked
+# device arrays, and a long-running serving loop with churning payloads
+# would otherwise grow device memory without bound.
 _payload_cache: dict = {}
 _PAYLOAD_CACHE_MAX = 256
+_PAYLOAD_CACHE_MAX_BYTES = 256 << 20        # pinned stacked-array budget
+_payload_cache_bytes = 0
+
+
+def _entry_nbytes(hit) -> int:
+    """Bytes one cache entry pins: the stacked device array plus the host
+    source arrays it keeps alive for id stability."""
+    stacked, refs = hit
+    n = int(stacked.nbytes)
+    for group in refs:
+        arrays = group if isinstance(group, (tuple, list)) else (group,)
+        n += sum(int(a.nbytes) for a in arrays)  # no host sync: attr only
+    return n
+
+
+def _payload_cache_get(key):
+    """LRU hit: pop + reinsert at the MRU end (byte total unchanged)."""
+    hit = _payload_cache.pop(key, None)
+    if hit is not None:
+        _payload_cache[key] = hit
+    return hit
+
+
+def _payload_cache_put(key, hit) -> None:
+    """Insert at the MRU end, then evict LRU entries until both the entry
+    count and the pinned-byte budget hold. The newest entry itself is never
+    evicted — one oversized batch must still be cacheable or recurring
+    pipelines would re-upload it every call."""
+    global _payload_cache_bytes
+    _payload_cache[key] = hit
+    _payload_cache_bytes += _entry_nbytes(hit)
+    while (len(_payload_cache) > _PAYLOAD_CACHE_MAX
+           or _payload_cache_bytes > _PAYLOAD_CACHE_MAX_BYTES):
+        if len(_payload_cache) <= 1:
+            break
+        old = _payload_cache.pop(next(iter(_payload_cache)))
+        _payload_cache_bytes -= _entry_nbytes(old)
+
+
+def _payload_cache_clear() -> None:
+    """Drop every pinned payload batch (test hygiene)."""
+    global _payload_cache_bytes
+    _payload_cache.clear()
+    _payload_cache_bytes = 0
 
 
 def _payload_stack(programs: Sequence[PimProgram], words: int) -> jnp.ndarray:
@@ -231,10 +278,8 @@ def _payload_stack(programs: Sequence[PimProgram], words: int) -> jnp.ndarray:
         # could otherwise alias e.g. 2 programs x 2 payloads vs 4 x 1
         key = (len(programs), n_pay, words) + tuple(
             id(a) for p in programs for a in p.payloads)
-    hit = _payload_cache.pop(key, None)
+    hit = _payload_cache_get(key)
     if hit is None:
-        if len(_payload_cache) >= _PAYLOAD_CACHE_MAX:
-            _payload_cache.pop(next(iter(_payload_cache)))
         if n_pay == 0:
             stacked = jnp.zeros((len(programs), 0, words), jnp.uint32)
             refs = ()
@@ -242,8 +287,8 @@ def _payload_stack(programs: Sequence[PimProgram], words: int) -> jnp.ndarray:
             stacked = jnp.asarray(np.stack(
                 [np.stack(p.payloads) for p in programs]).astype(np.uint32))
             refs = tuple(p.payloads for p in programs)
-        hit = (stacked, refs)
-    _payload_cache[key] = hit           # (re)insert at the MRU end
+        _payload_cache_put(key, (stacked, refs))
+        return stacked
     return hit[0]
 
 
@@ -824,22 +869,18 @@ def _stack_step_payloads(pay_list):
     copies of identical host data per call."""
     if any(p is not pay_list[0] for p in pay_list):
         key = ("multi",) + tuple(id(p) for p in pay_list)
-        hit = _payload_cache.pop(key, None)
+        hit = _payload_cache_get(key)
         if hit is None:
-            if len(_payload_cache) >= _PAYLOAD_CACHE_MAX:
-                _payload_cache.pop(next(iter(_payload_cache)))
             # the cache entry holds the batches, pinning their ids
             hit = (jnp.stack(pay_list), tuple(pay_list))
-        _payload_cache[key] = hit
+            _payload_cache_put(key, hit)
         return hit[0]
     key = ("steps", len(pay_list), id(pay_list[0]))
-    hit = _payload_cache.pop(key, None)
+    hit = _payload_cache_get(key)
     if hit is None:
-        if len(_payload_cache) >= _PAYLOAD_CACHE_MAX:
-            _payload_cache.pop(next(iter(_payload_cache)))
         # the cache entry holds the source batch, pinning its id
         hit = (jnp.stack([pay_list[0]] * len(pay_list)), pay_list[0])
-    _payload_cache[key] = hit
+        _payload_cache_put(key, hit)
     return hit[0]
 
 

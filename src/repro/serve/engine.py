@@ -28,6 +28,16 @@ def greedy_generate(cfg, params, batch, *, max_new_tokens: int,
                     max_cache_len: int | None = None, temperature: float = 0.0,
                     key=None):
     """batch: prompt inputs (see data.pipeline). Returns (B, max_new) tokens."""
+    if max_new_tokens < 0:
+        raise ValueError(
+            f"max_new_tokens must be >= 0, got {max_new_tokens}")
+    if max_new_tokens == 0:
+        # the scan below would get length=-1, which XLA rejects with an
+        # opaque "invalid tensor dimension size" — zero tokens is just an
+        # empty result, no prefill or decode needed
+        b = (batch["frame_embeds"] if cfg.frontend == "audio_frames"
+             else batch["tokens"]).shape[0]
+        return jnp.zeros((b, 0), jnp.int32)
     prompt_len = (batch["frame_embeds"].shape[1]
                   if cfg.frontend == "audio_frames"
                   else batch["tokens"].shape[1]

@@ -372,6 +372,93 @@ def _assert_workload_agrees(seed: int, async_host=False, use_order=False):
                                rtol=1e-6, atol=1e-6)
 
 
+def _assert_multitenant_agrees(seed: int, n_steps: int):
+    """Multi-tenant serving leg: N tenants coalesced on one shared device
+    through :class:`PimServeFront` must be bit-exact — per-slot states,
+    host reads, and cost meters — against each tenant running ALONE on a
+    private device slice of the same width; and the per-tenant accounting
+    must sum to the device-level totals."""
+    from repro.serve.pim_front import PimServeFront
+
+    rng = np.random.default_rng(seed)
+    cfg = pim.DeviceConfig(channels=1, ranks=1, banks_per_rank=4,
+                           num_rows=ROWS, words=WORDS)
+    sizes = [1, int(rng.integers(1, 3))]
+    if sum(sizes) < cfg.n_banks and rng.random() < 0.5:
+        sizes.append(int(rng.integers(1, cfg.n_banks - sum(sizes) + 1)))
+
+    tenants = {}
+    for i, nb in enumerate(sizes):
+        layout = [_build_program(rng, int(rng.integers(1, 10)))
+                  if rng.random() < 0.8 else None for _ in range(nb)]
+        if all(p is None for p in layout):
+            layout[0] = _build_program(rng, 3)
+        steps = [[p.with_payloads(
+                      rng.integers(0, 2**32, (len(p.payloads), WORDS),
+                                   dtype=np.uint32))
+                  if p is not None else None for p in layout]
+                 for _ in range(n_steps)]
+        tenants[f"t{i}"] = (nb, steps)
+
+    front = PimServeFront(cfg)
+    placements = {tid: front.submit(tid, steps, banks=nb)
+                  for tid, (nb, steps) in tenants.items()}
+    reads_front = {tid: [] for tid in tenants}
+    reports = {}
+    for res in front.run():
+        for tid in res.placements:
+            got = res.tenant_reads(tid)
+            reads_front[tid].extend(got if res.n_steps > 1 else [got])
+    rec = front.reconcile()
+    for tid in tenants:
+        reports[tid] = front.report(tid)
+    shared = front.device
+
+    for tid, (nb, steps) in tenants.items():
+        dev = pim.make_device(cfg.subdevice(nb))
+        reads_iso = []
+        for s in steps:
+            r = pim.schedule(dev, s)
+            dev = r.state
+            reads_iso.append(r.reads)
+        banks = placements[tid].banks
+        # states: the tenant's banks on the shared device == its private run
+        np.testing.assert_array_equal(
+            np.asarray(shared.banks.bits)[list(banks)],
+            np.asarray(dev.banks.bits), err_msg=f"{tid}: bits")
+        # meters: per-slot cost is layout-independent, bit-exact
+        for f in INT_FIELDS + FLOAT_FIELDS:
+            assert np.array_equal(
+                np.asarray(getattr(shared.banks.meter, f))[list(banks)],
+                np.asarray(getattr(dev.banks.meter, f))), f"{tid}: {f}"
+        # reads: every host-read row of every step
+        assert len(reads_front[tid]) == n_steps, tid
+        for k in range(n_steps):
+            for sl in range(nb):
+                assert len(reads_front[tid][k][sl]) == len(reads_iso[k][sl])
+                for x, y in zip(reads_front[tid][k][sl], reads_iso[k][sl]):
+                    assert np.array_equal(np.asarray(x), np.asarray(y)), \
+                        f"{tid}: step {k} slot {sl}"
+        # accounting: the tenant's metered share equals its isolated cost
+        np.testing.assert_allclose(
+            reports[tid].energy_nj,
+            float(np.asarray(dev.slot_energy_nj, np.float64).sum()),
+            rtol=1e-6, err_msg=f"{tid}: energy")
+        np.testing.assert_allclose(
+            reports[tid].busy_ns,
+            float(np.asarray(dev.slot_time_ns, np.float64).sum()),
+            rtol=1e-6, err_msg=f"{tid}: busy")
+        assert reports[tid].host_bytes == sum(
+            p.host_bytes for s in steps for p in s if p is not None)
+
+    # ... and the per-tenant sums reconcile with the device-level totals
+    np.testing.assert_allclose(rec["tenant_energy_nj"],
+                               rec["device_energy_nj"], rtol=1e-9)
+    np.testing.assert_allclose(rec["tenant_busy_ns"],
+                               rec["device_busy_ns"], rtol=1e-9)
+    assert rec["tenant_host_bytes"] == rec["device_host_bytes"]
+
+
 if HAVE_HYPOTHESIS:
     @given(seed=st.integers(0, 2**32 - 1), n_ops=st.integers(1, 24))
     def test_differential_eager_compiled_scheduled(seed, n_ops):
@@ -402,6 +489,13 @@ if HAVE_HYPOTHESIS:
            use_order=st.booleans())
     def test_differential_workload_vs_per_step(seed, async_host, use_order):
         _assert_workload_agrees(seed, async_host, use_order)
+
+    # capped like the workload leg: each example compiles the coalesced
+    # front-end plan PLUS one private-device plan per tenant
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1), n_steps=st.integers(1, 3))
+    def test_differential_multitenant_vs_isolated(seed, n_steps):
+        _assert_multitenant_agrees(seed, n_steps)
 else:
     @pytest.mark.parametrize("seed", range(25))
     def test_differential_eager_compiled_scheduled(seed):
@@ -427,6 +521,10 @@ else:
     def test_differential_workload_vs_per_step(seed):
         _assert_workload_agrees(seed, async_host=bool(seed % 2),
                                 use_order=bool(seed % 3 == 0))
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_differential_multitenant_vs_isolated(seed):
+        _assert_multitenant_agrees(seed, 1 + seed % 3)
 
 
 @pytest.mark.parametrize("seed", range(3))

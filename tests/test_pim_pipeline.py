@@ -250,6 +250,127 @@ def test_payload_stack_cached_for_recurring_programs():
     assert s3 is not s1
 
 
+def test_payload_cache_byte_budget_evicts_pinned_arrays(monkeypatch):
+    """Regression: the payload cache capped entry COUNT but not bytes — a
+    serving loop churning payload batches pinned device memory without
+    bound. Eviction by byte budget must actually drop the pinned stacked
+    arrays (verified by weakref death), not just the dict entries."""
+    import gc
+    import weakref
+
+    pim_schedule._payload_cache_clear()
+    rng = np.random.default_rng(20)
+
+    def batch():
+        return [_step_prog(_rand_row(rng)).with_payloads([_rand_row(rng)])
+                for _ in range(2)]
+
+    probe = batch()
+    per_entry = pim_schedule._entry_nbytes(
+        (pim_schedule._payload_stack(probe, WORDS),
+         tuple(p.payloads for p in probe)))
+    pim_schedule._payload_cache_clear()
+    monkeypatch.setattr(pim_schedule, "_PAYLOAD_CACHE_MAX_BYTES",
+                        3 * per_entry)
+
+    first = batch()
+    dead = weakref.ref(pim_schedule._payload_stack(first, WORDS))
+    for _ in range(4):                  # 5 entries vs a 3-entry byte budget
+        pim_schedule._payload_stack(batch(), WORDS)
+    assert len(pim_schedule._payload_cache) <= 3
+    assert pim_schedule._payload_cache_bytes <= 3 * per_entry
+    gc.collect()
+    assert dead() is None, "evicted entry still pins its device batch"
+    # ... and the evicted programs now re-stack to a fresh batch
+    fresh = pim_schedule._payload_stack(first, WORDS)
+    np.testing.assert_array_equal(
+        np.asarray(fresh[0, 0]), np.asarray(first[0].payloads[0]))
+
+
+def test_payload_cache_keeps_one_oversized_entry(monkeypatch):
+    """The newest entry is never evicted: one batch larger than the whole
+    budget must still cache (recurring pipelines would otherwise re-upload
+    it every call)."""
+    pim_schedule._payload_cache_clear()
+    monkeypatch.setattr(pim_schedule, "_PAYLOAD_CACHE_MAX_BYTES", 1)
+    rng = np.random.default_rng(21)
+    progs = [_step_prog(_rand_row(rng)).with_payloads([_rand_row(rng)])
+             for _ in range(2)]
+    s1 = pim_schedule._payload_stack(progs, WORDS)
+    assert pim_schedule._payload_stack(progs, WORDS) is s1
+    assert len(pim_schedule._payload_cache) == 1
+
+
+def test_payload_cache_id_recycling_never_aliases(monkeypatch):
+    """The id()-keyed cache relies on entries pinning their key arrays.
+    After byte-budget eviction releases the pins, a recycled id must MISS
+    and restack — never serve the dead entry's data."""
+    import gc
+
+    pim_schedule._payload_cache_clear()
+    monkeypatch.setattr(pim_schedule, "_PAYLOAD_CACHE_MAX_BYTES", 1)
+    rng = np.random.default_rng(22)
+    stream = _step_prog(_rand_row(rng))
+
+    old_prog = stream.with_payloads([_rand_row(rng)])
+    evicted_id = id(old_prog.payloads[0])
+    old_data = old_prog.payloads[0].copy()
+    pim_schedule._payload_stack([old_prog], WORDS)
+    # while cached the key array is pinned: its id cannot be recycled
+    assert any(isinstance(k, tuple) and evicted_id in k
+               for k in pim_schedule._payload_cache)
+    # a second entry evicts the first (byte budget = 1), dropping the pin
+    pim_schedule._payload_stack(
+        [stream.with_payloads([_rand_row(rng)])], WORDS)
+    assert not any(isinstance(k, tuple) and evicted_id in k
+                   for k in pim_schedule._payload_cache)
+    del old_prog
+    gc.collect()
+    # allocate until CPython hands back the evicted id (usually instant);
+    # correctness must hold either way, the loop just makes the collision
+    # scenario real rather than hypothetical
+    recycled = None
+    for _ in range(512):
+        cand = stream.with_payloads([_rand_row(rng)])
+        if id(cand.payloads[0]) == evicted_id:
+            recycled = cand
+            break
+        del cand
+    if recycled is None:
+        pytest.skip("allocator never recycled the id")
+    assert not np.array_equal(recycled.payloads[0], old_data)
+    out = pim_schedule._payload_stack([recycled], WORDS)
+    np.testing.assert_array_equal(np.asarray(out[0, 0]),
+                                  recycled.payloads[0])
+
+
+def test_workload_fast_cache_pins_key_steps():
+    """_workload_fast_cache keys on Phase.steps identity; the entry must
+    pin the steps' programs while cached (no stale hit for a recycled id)
+    and release them when evicted."""
+    import gc
+    import weakref
+
+    rng = np.random.default_rng(23)
+    cfg = _cfg(banks_per_rank=2)
+    dev = pim.make_device(cfg)
+    base = _step_prog(_rand_row(rng))
+    layout = [base.with_payloads([_rand_row(rng)]) for _ in range(2)]
+    phases = [pim_schedule.Phase.repeat(layout, 2)]
+    pim.schedule_workload(dev, phases)
+    ref = weakref.ref(layout[0])
+    del layout, phases, base
+    gc.collect()
+    assert ref() is not None, "cached workload entry dropped its key pin"
+    # both id-keyed layout caches pin the programs; once evicted from both,
+    # nothing else holds them (the payload/compile caches key on payload
+    # arrays and digests, not program objects)
+    pim_schedule._workload_fast_cache.clear()
+    pim_schedule._phase_lower_cache.clear()
+    gc.collect()
+    assert ref() is None, "programs leak after workload-cache eviction"
+
+
 def test_schedule_result_metrics_are_plain_floats():
     """The lazily-converted metrics still read as plain host values."""
     rng = np.random.default_rng(7)

@@ -1,0 +1,331 @@
+"""Multi-tenant serving front end (DESIGN.md §13).
+
+Locks down the serving contracts: explicit placement with admission-time
+over-subscription rejection, the static-verifier admission gate (hostile
+tenants are rejected with diagnostics, never scheduled), tenant isolation
+(COPY destinations outside the tenant's banks are PIM301 at admission;
+legal copies are relocated through the placement map), cross-tenant
+stream coalescing into shared vmapped groups, warm-``_StepPlan``
+preemption (a departing tenant never invalidates the survivors' plan),
+continuous batching via single-dispatch ``schedule_pipeline`` windows,
+and per-tenant accounting that reconciles with device-level totals.
+"""
+import numpy as np
+import pytest
+
+from repro.core import pim
+from repro.core.pim.schedule import SCHED_STATS
+from repro.serve.pim_front import (AdmissionError, PimServeFront,
+                                   Placement)
+
+ROWS = 16
+WORDS = 4
+
+
+def _cfg(banks=4, subarrays=1):
+    return pim.DeviceConfig(channels=1, ranks=1, banks_per_rank=banks,
+                            subarrays=subarrays, num_rows=ROWS,
+                            words=WORDS)
+
+
+def _prog(seed=0, *, copy_to=None, words=WORDS):
+    """A small verified stream: two host writes, an AND, a host read.
+    ``copy_to`` adds a cross-bank COPY to tenant-local bank ``copy_to``."""
+    b = pim.ProgramBuilder(ROWS, words)
+    rng = np.random.default_rng(seed)
+    b.write_row(2, rng.integers(0, 2**32, (words,), dtype=np.uint32))
+    b.write_row(3, rng.integers(0, 2**32, (words,), dtype=np.uint32))
+    b.ambit_and(2, 3, 4)
+    if copy_to is not None:
+        b.copy_row(4, 5, dst_bank=copy_to, dst_sub=0)
+    b.read_row(4)
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# Placement & admission
+# ---------------------------------------------------------------------------
+
+def test_placement_map_is_explicit_and_exclusive():
+    front = PimServeFront(_cfg(banks=4, subarrays=2))
+    pa = front.submit("A", (_prog(0), 2), banks=2)
+    pb = front.submit("B", (_prog(1), 2), banks=1)
+    assert isinstance(pa, Placement)
+    assert pa.banks == (0, 1) and pb.banks == (2,)
+    # every subarray of an owned bank belongs to the tenant
+    assert pa.slots == (0, 1, 2, 3) and pb.slots == (4, 5)
+    assert set(pa.slots) & set(pb.slots) == set()
+    assert front.free_banks == (3,)
+    assert front.placement("A") == pa
+    assert set(front.placement()) == {"A", "B"}
+
+
+def test_oversubscription_rejected_at_admission():
+    front = PimServeFront(_cfg(banks=4))
+    front.submit("A", (_prog(), 2), banks=3)
+    with pytest.raises(AdmissionError, match="over-subscribed"):
+        front.submit("B", (_prog(), 2), banks=2)
+    # a request larger than the whole device can never fit, even queued
+    with pytest.raises(AdmissionError, match="cannot ever fit"):
+        front.submit("C", (_prog(), 2), banks=5, queue=True)
+    with pytest.raises(AdmissionError, match="already submitted"):
+        front.submit("A", (_prog(), 1), banks=1)
+
+
+def test_queued_tenant_admitted_at_step_boundary():
+    front = PimServeFront(_cfg(banks=2))
+    front.submit("A", (_prog(0), 2), banks=2)
+    assert front.submit("B", (_prog(1), 3), banks=1, queue=True) is None
+    assert front.pending == ("B",)
+    results = front.run()
+    assert front.pending == () and front.active == ()
+    assert front.report("A").n_steps == 2
+    assert front.report("B").n_steps == 3
+    assert sum(r.n_steps for r in results) == 2 + 3
+
+
+# ---------------------------------------------------------------------------
+# The admission-time verifier gate
+# ---------------------------------------------------------------------------
+
+def test_hostile_tenant_rejected_with_diagnostics(tmp_path):
+    """The pim104 fixture (scratch-alias hazard) must be rejected at
+    submit() with its lint report — not admitted, not a crash."""
+    fixture = "tests/fixtures/lint/pim104.trace"
+    bad = pim.PimProgram.from_trace(open(fixture).read())
+    cfg = pim.DeviceConfig(channels=1, ranks=1, banks_per_rank=2,
+                           num_rows=16, words=2)
+    front = PimServeFront(cfg)
+    with pytest.raises(AdmissionError) as ei:
+        front.submit("evil", (bad, 2), banks=1)
+    assert ei.value.report is not None
+    assert "PIM104" in ei.value.report.codes()
+    # nothing was allocated; well-behaved tenants are unaffected
+    assert front.free_banks == (0, 1)
+    good = pim.ProgramBuilder(16, 2)
+    good.write_row(2, np.zeros(2, np.uint32))
+    good.read_row(2)
+    front.submit("good", (good.build(), 1), banks=1)
+    front.run()
+    assert front.report("good").n_steps == 1
+
+
+def test_shape_mismatch_rejected():
+    front = PimServeFront(_cfg())
+    with pytest.raises(AdmissionError, match="shape"):
+        front.submit("A", (_prog(words=2, seed=0), 1), banks=1)
+
+
+def test_non_program_rejected():
+    front = PimServeFront(_cfg())
+    with pytest.raises(AdmissionError):
+        front.submit("A", [["not a program"]], banks=1)
+
+
+def test_copy_escape_rejected_as_pim301():
+    """A COPY addressed outside the tenant's own banks is outside its
+    subdevice — the admission lint rejects it (tenant isolation)."""
+    front = PimServeFront(_cfg(banks=4))
+    with pytest.raises(AdmissionError) as ei:
+        front.submit("A", ([_prog(copy_to=1)], 1), banks=1)
+    assert ei.value.report is not None
+    assert "PIM301" in ei.value.report.codes()
+
+
+def test_confined_copy_relocated_through_placement():
+    """A legal tenant-local cross-bank COPY is rewritten to device
+    coordinates at admission and lands in the right device bank."""
+    front = PimServeFront(_cfg(banks=4))
+    front.submit("filler", (_prog(9), 1), banks=2)
+    p = front.submit("C", ([_prog(0, copy_to=1), None], 1), banks=2)
+    assert p.banks == (2, 3)
+    reloc = front._active["C"].steps[0][0]
+    copies = [op for op in reloc.ops if op.op == pim.ir.OP_COPY]
+    assert copies and copies[0].delta == 3     # local bank 1 -> device 3
+    res = front.step()
+    # the copied row actually landed in device bank 3, row 5
+    expect = np.asarray(res.tenant_reads("C")[0])[0]
+    got = np.asarray(res.result.state.banks.bits[3][5], np.uint32)
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_copy_free_programs_not_rewritten():
+    """Programs without cross-slot COPYs keep their identity through
+    placement — digests (and so coalescing and the id-keyed payload
+    cache) are placement-independent."""
+    front = PimServeFront(_cfg(banks=4))
+    p = _prog(0)
+    front.submit("filler", (_prog(9), 1), banks=1)
+    front.submit("A", (p, 2), banks=1)
+    assert front._active["A"].steps[0][0] is p
+
+
+# ---------------------------------------------------------------------------
+# Coalescing & the serving loop
+# ---------------------------------------------------------------------------
+
+def test_identical_streams_coalesce_across_tenants():
+    front = PimServeFront(_cfg(banks=4))
+    shared = _prog(7)
+    for tid, banks in (("A", 2), ("B", 1), ("C", 1)):
+        front.submit(tid, (shared, 2), banks=banks)
+    res = front.step()
+    assert res.n_active_slots == 4
+    assert res.n_groups == 1
+    assert res.coalescing == 4.0
+
+
+def test_same_stream_different_payloads_still_coalesce():
+    """Digests cover the command stream, not payload data — tenants
+    running the same program shape over different data share one group
+    (the payloads are the vmapped axis)."""
+    front = PimServeFront(_cfg(banks=2))
+    front.submit("A", (_prog(0), 1), banks=1)
+    front.submit("B", (_prog(1), 1), banks=1)
+    res = front.step()
+    assert res.n_groups == 1 and res.coalescing == 2.0
+
+
+def test_distinct_streams_do_not_coalesce():
+    other = pim.ProgramBuilder(ROWS, WORDS)
+    other.write_row(2, np.zeros(WORDS, np.uint32))
+    other.shift_k(2, 6, 2)             # different op stream -> new digest
+    other.read_row(6)
+    front = PimServeFront(_cfg(banks=2))
+    front.submit("A", (_prog(0), 1), banks=1)
+    front.submit("B", (other.build(), 1), banks=1)
+    res = front.step()
+    assert res.n_groups == 2 and res.coalescing == 1.0
+
+
+def test_departure_keeps_surviving_plan_warm():
+    """Preemption contract: a departing tenant's slots become idle None
+    entries; the surviving layout's ``_StepPlan`` stays warm (no new
+    plan miss when the survivors' layout recurs)."""
+    front = PimServeFront(_cfg(banks=4))
+    front.submit("A", (_prog(1), 10), banks=2)
+    front.step()
+    front.step()
+    assert SCHED_STATS["plan_misses"] == 1
+    front.submit("B", (_prog(2), 2), banks=1)
+    front.step()                       # A+B layout: one new plan
+    assert SCHED_STATS["plan_misses"] == 2
+    front.step()                       # B's last step; departs at boundary
+    assert front.active == ("A",)
+    front.step()                       # A-alone layout again: warm
+    assert SCHED_STATS["plan_misses"] == 2
+
+
+def test_run_pipelines_recurring_windows_single_dispatch():
+    """A recurring window runs as ONE schedule_pipeline dispatch, not one
+    dispatch per step."""
+    front = PimServeFront(_cfg(banks=4))
+    front.submit("A", (_prog(0), 8), banks=2)
+    front.submit("B", (_prog(1), 8), banks=2)
+    d0 = SCHED_STATS["dispatches"]
+    results = front.run(chunk=8)
+    assert sum(r.n_steps for r in results) == 8
+    assert SCHED_STATS["dispatches"] - d0 == 1
+    assert all(front.report(t).n_steps == 8 for t in ("A", "B"))
+
+
+def test_run_windows_break_at_membership_changes():
+    """Tenants of different lengths: the window never spans a departure,
+    and the queue admits between dispatches."""
+    front = PimServeFront(_cfg(banks=2))
+    front.submit("A", (_prog(0), 6), banks=1)
+    front.submit("B", (_prog(1), 2), banks=1)
+    front.submit("C", (_prog(2), 3), banks=1, queue=True)
+    results = front.run(chunk=64)
+    # windows: [A+B x2] [A+C x3] [A x1] (C admitted when B departs)
+    assert [r.n_steps for r in results] == [2, 3, 1]
+    assert front.report("C").n_steps == 3
+
+
+def test_same_digest_steps_pipeline_even_as_distinct_objects():
+    """Recurrence is by stream_key, not identity: per-step program objects
+    with the same stream (different payload data) still pipeline."""
+    front = PimServeFront(_cfg(banks=2))
+    front.submit("A", [_prog(0), _prog(1), _prog(2)], banks=1)
+    d0 = SCHED_STATS["dispatches"]
+    results = front.run()
+    assert sum(r.n_steps for r in results) == 3
+    assert SCHED_STATS["dispatches"] - d0 == 1
+
+
+def test_non_recurring_steps_fall_back_to_per_step():
+    def variant(k):
+        b = pim.ProgramBuilder(ROWS, WORDS)
+        b.write_row(2, np.zeros(WORDS, np.uint32))
+        b.shift_k(2, 6, k)             # k shifts: k distinct op streams
+        b.read_row(6)
+        return b.build()
+
+    front = PimServeFront(_cfg(banks=2))
+    front.submit("A", [variant(1), variant(2), variant(3)], banks=1)
+    d0 = SCHED_STATS["dispatches"]
+    results = front.run()
+    assert sum(r.n_steps for r in results) == 3
+    assert SCHED_STATS["dispatches"] - d0 == 3
+
+
+def test_depart_preempts_and_frees_banks():
+    front = PimServeFront(_cfg(banks=4))
+    front.submit("A", (_prog(0), 100), banks=3)
+    front.step()
+    rep = front.depart("A")
+    assert rep.n_steps == 1            # unconsumed steps discarded
+    assert front.free_banks == (0, 1, 2, 3)
+    assert front.report("A").n_steps == 1
+    with pytest.raises(KeyError):
+        front.depart("A")
+
+
+def test_step_with_no_tenants_raises():
+    front = PimServeFront(_cfg())
+    with pytest.raises(RuntimeError, match="no active tenants"):
+        front.step()
+
+
+# ---------------------------------------------------------------------------
+# Accounting
+# ---------------------------------------------------------------------------
+
+def test_tenant_accounting_reconciles_with_device():
+    front = PimServeFront(_cfg(banks=4))
+    front.submit("A", (_prog(0), 5), banks=2)
+    front.submit("B", (_prog(1), 3), banks=1)
+    front.run()
+    front.submit("C", (_prog(2), 4), banks=3)   # reuses freed banks
+    front.run()
+    rec = front.reconcile()
+    assert rec["tenant_busy_ns"] == pytest.approx(
+        rec["device_busy_ns"], rel=1e-9)
+    assert rec["tenant_energy_nj"] == pytest.approx(
+        rec["device_energy_nj"], rel=1e-9)
+    assert rec["tenant_host_bytes"] == rec["device_host_bytes"]
+    assert rec["device_steps"] == 5 + 4         # shared steps, not per-tenant
+
+
+def test_tenant_report_walls_and_percentiles():
+    front = PimServeFront(_cfg(banks=2))
+    front.submit("A", (_prog(0), 4), banks=1)
+    front.run(chunk=2)
+    rep = front.report("A")
+    assert rep.wall_ns.shape == (4,)
+    assert rep.p50_wall_ns > 0
+    assert rep.p99_wall_ns >= rep.p50_wall_ns
+    assert rep.busy_ns > 0 and rep.energy_nj > 0
+    # host bytes: per-step stream traffic x steps
+    assert rep.host_bytes == 4 * _prog(0).host_bytes
+
+
+def test_live_report_tracks_progress():
+    front = PimServeFront(_cfg(banks=2))
+    front.submit("A", (_prog(0), 3), banks=1)
+    front.step()
+    r1 = front.report("A")
+    front.step()
+    r2 = front.report("A")
+    assert r1.n_steps == 1 and r2.n_steps == 2
+    assert r2.energy_nj > r1.energy_nj

@@ -60,6 +60,37 @@ def test_decode_loop_is_single_dispatch(setup):
     assert jnp.array_equal(out1, out2)      # greedy decode is deterministic
 
 
+def test_zero_new_tokens_returns_empty(setup):
+    """Regression: max_new_tokens=0 used to reach lax.scan(length=-1) and
+    die with an opaque MLIR "invalid tensor dimension size" — it must be
+    an empty (B, 0) result, with no prefill or decode dispatched."""
+    cfg, params = setup
+    prompts = make_inputs(cfg, 3, 8, labels=False)
+    DECODE_STATS["dispatches"] = 0
+    out = greedy_generate(cfg, params, prompts, max_new_tokens=0)
+    assert out.shape == (3, 0)
+    assert out.dtype == jnp.int32
+    assert DECODE_STATS["dispatches"] == 0
+
+
+def test_one_new_token_edge(setup):
+    """length=0 scan edge: a single token comes from prefill sampling
+    alone and must match the first column of a longer generation."""
+    cfg, params = setup
+    prompts = make_inputs(cfg, 2, 8, labels=False)
+    one = greedy_generate(cfg, params, prompts, max_new_tokens=1)
+    assert one.shape == (2, 1)
+    more = greedy_generate(cfg, params, prompts, max_new_tokens=4)
+    assert jnp.array_equal(one, more[:, :1])
+
+
+def test_negative_new_tokens_rejected(setup):
+    cfg, params = setup
+    prompts = make_inputs(cfg, 1, 8, labels=False)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        greedy_generate(cfg, params, prompts, max_new_tokens=-1)
+
+
 def test_ssm_arch_generates():
     cfg = get_config("falcon-mamba-7b", smoke=True)
     params = init_params(cfg, jax.random.PRNGKey(1))
