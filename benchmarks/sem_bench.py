@@ -1,0 +1,106 @@
+"""pimsem benchmark (``sem_bench.json``): cost trajectory of the symbolic
+semantic analyzer (ISSUE 9, DESIGN.md §14).
+
+  * ``analyze_100k_cold_ms``  — first full abstract interpretation of a
+    100k-op chained-shift stream (run-collapsed: the whole chain is one
+    vectorized displacement). Acceptance bar: < 1000 ms, enforced here
+    and in tests/test_pim_sem.py.
+  * ``analyze_100k_warm_us``  — the same call against the content-digest
+    cache; must rebuild ZERO column tables (``COLUMN_STATS``-pinned).
+  * ``findings_100k_ms``      — the PIM4xx findings pass over the same
+    stream.
+  * ``prove_xor_us`` / ``fusion_*_ms`` — equivalence/fusion proofs over
+    the canonical kernels (ambit_xor, the Table 2/3 shift workload, the
+    recorded GF(2^8) xtime — 16 symbolic inputs, the analyzer's deepest
+    real case).
+
+Host wall time on whatever runs the bench (CPU in CI); the point is the
+trajectory, not the absolute microseconds.
+"""
+import json
+import time
+
+from repro.core import pim
+from repro.core.pim import ir, sem
+from repro.core.pim.lint import _recorded_xtime
+from repro.core.pim.program import ambit_xor_program, shift_workload_program
+
+N_OPS = 100_000
+ROWS, WORDS = 64, 4
+
+
+def _shift_stream(n=N_OPS):
+    b = pim.ProgramBuilder(ROWS, WORDS)
+    b.shift(0, 1, +1)
+    for _ in range(n - 1):
+        b.shift(1, 1, +1)
+    prog = b.build()
+    prog.columns                       # columnar encode outside the timers
+    return prog
+
+
+def run(report=print, json_path=None):
+    out = {"n_ops": N_OPS, "rows": ROWS, "words": WORDS}
+
+    prog = _shift_stream()
+    t0 = time.perf_counter()
+    sem.analyze(prog)
+    out["analyze_100k_cold_ms"] = (time.perf_counter() - t0) * 1e3
+    assert out["analyze_100k_cold_ms"] < 1000.0, \
+        f"100k-op analysis over budget: {out['analyze_100k_cold_ms']:.0f}ms"
+
+    pim.reset_stats()
+    t0 = time.perf_counter()
+    sem.analyze(prog)
+    out["analyze_100k_warm_us"] = (time.perf_counter() - t0) * 1e6
+    out["column_builds_warm"] = int(ir.COLUMN_STATS["builds"])
+    out["analysis_hits_warm"] = int(sem.SEM_STATS["analysis_hits"])
+    assert out["column_builds_warm"] == 0, \
+        "warm digest hit rebuilt column tables"
+
+    t0 = time.perf_counter()
+    sem.semantic_findings(prog)
+    out["findings_100k_ms"] = (time.perf_counter() - t0) * 1e3
+
+    xor = ambit_xor_program()
+    t0 = time.perf_counter()
+    rep = sem.prove_equivalent(xor, xor)
+    out["prove_xor_us"] = (time.perf_counter() - t0) * 1e6
+    assert rep.verdict == sem.EQUIVALENT
+
+    t0 = time.perf_counter()
+    assert sem.fusion_report(xor).verdict == sem.EQUIVALENT
+    out["fusion_xor_ms"] = (time.perf_counter() - t0) * 1e3
+
+    shifts = shift_workload_program(256, num_rows=ROWS, words=32)
+    t0 = time.perf_counter()
+    assert sem.fusion_report(shifts).verdict == sem.EQUIVALENT
+    out["fusion_shift256_ms"] = (time.perf_counter() - t0) * 1e3
+
+    xtime = _recorded_xtime()
+    t0 = time.perf_counter()
+    assert sem.fusion_report(xtime).verdict == sem.EQUIVALENT
+    out["fusion_gf_xtime_ms"] = (time.perf_counter() - t0) * 1e3
+
+    report(f"analyze 100k ops: cold {out['analyze_100k_cold_ms']:.1f} ms, "
+           f"warm {out['analyze_100k_warm_us']:.0f} us "
+           f"(column rebuilds: {out['column_builds_warm']})")
+    report(f"findings 100k ops: {out['findings_100k_ms']:.1f} ms")
+    report(f"proofs: xor {out['prove_xor_us']:.0f} us, fusion xor "
+           f"{out['fusion_xor_ms']:.1f} ms, shift256 "
+           f"{out['fusion_shift256_ms']:.1f} ms, gf.xtime "
+           f"{out['fusion_gf_xtime_ms']:.1f} ms")
+
+    blob = json.dumps(out, indent=2, sort_keys=True)
+    if json_path:
+        with open(json_path, "w") as f:
+            f.write(blob + "\n")
+        report(f"wrote {json_path}")
+    else:
+        report(blob)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(json_path=sys.argv[1] if len(sys.argv) > 1 else None)

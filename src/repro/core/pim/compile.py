@@ -469,13 +469,20 @@ SHIFT_FUSE_MIN = 32
 
 
 def fuse(program: ir.PimProgram, *,
-         shift_fuse_min: int = SHIFT_FUSE_MIN) -> tuple:
+         shift_fuse_min: int = SHIFT_FUSE_MIN,
+         verify_semantics: bool = False) -> tuple:
     """Lower the op stream to a segment list for the executor.
 
     Pattern detection (MAJ idioms, shift chains) runs vectorized on the
     program's columnar encoding; the walk then just jumps between the
     precomputed match sites instead of re-inspecting ``PimOp`` operands at
-    every position."""
+    every position.
+
+    ``verify_semantics=True`` runs the symbolic abstract interpreter
+    (``sem.py``) over BOTH the op stream and the produced segment list
+    and raises :class:`~.sem.EquivalenceError` unless they are proved to
+    compute identical state — the opt-in proof that fusion preserved
+    semantics (UNKNOWN also raises: a gate must not pass unproved)."""
     ops = program.ops
     n = len(ops)
     if n == 0:
@@ -538,7 +545,11 @@ def fuse(program: ir.PimProgram, *,
         residual.append(op)
         i += 1
     flush_residual()
-    return tuple(segments)
+    out = tuple(segments)
+    if verify_semantics:
+        from . import sem       # lazy: sem imports this module's dataclasses
+        sem.verify_fusion(program, out)
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -564,7 +575,8 @@ def compile_program(program: ir.PimProgram,
                     optimize: bool = False,
                     live_out: set[int] | None = None,
                     shift_fuse_min: int = SHIFT_FUSE_MIN,
-                    verify: bool = False) -> CompiledProgram:
+                    verify: bool = False,
+                    verify_semantics: bool = False) -> CompiledProgram:
     """Full pipeline: (optional lint) → (optional DCE) → fusion → cost
     tables.
 
@@ -575,6 +587,12 @@ def compile_program(program: ir.PimProgram,
     ``verify=True`` runs the static verifier (``lint.lint_program``) over
     the INPUT stream before any transformation and raises
     :class:`~.lint.LintError` on error-severity diagnostics.
+
+    ``verify_semantics=True`` additionally proves (``sem.py``) that the
+    fused segment list computes the same state as the op stream it was
+    lowered from, raising :class:`~.sem.EquivalenceError` otherwise. The
+    proof runs against the post-DCE stream when ``optimize=True`` (DCE
+    changes dead state on purpose; the fusion gate checks fusion).
     """
     if verify:
         from . import lint      # lazy: lint imports this module's passes
@@ -586,5 +604,6 @@ def compile_program(program: ir.PimProgram,
     f_tab, i_tab = cost_tables(program, cfg)
     return CompiledProgram(
         program=program,
-        segments=fuse(program, shift_fuse_min=shift_fuse_min),
+        segments=fuse(program, shift_fuse_min=shift_fuse_min,
+                      verify_semantics=verify_semantics),
         f_tab=f_tab, i_tab=i_tab)

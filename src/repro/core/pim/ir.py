@@ -323,6 +323,24 @@ class PimProgram:
         columnar encoding is built."""
         return self.columns.digest
 
+    @property
+    def payload_digest(self) -> bytes:
+        """Stable 128-bit hash of the HOSTW payload *contents* (sizes +
+        bits), memoized on the instance. The op-stream :attr:`digest`
+        deliberately excludes payload data (the stream-group contract),
+        but semantic verdicts (``sem.py``) depend on it — HOSTW bits are
+        constants in the truth-table domain — so content-keyed caches
+        pair both digests."""
+        pd = getattr(self, "_payload_digest", None)
+        if pd is None:
+            h = hashlib.blake2b(digest_size=16)
+            for p in self.payloads:
+                h.update(np.int64(p.size).tobytes())
+                h.update(np.ascontiguousarray(p, dtype=np.uint32).tobytes())
+            pd = h.digest()
+            object.__setattr__(self, "_payload_digest", pd)
+        return pd
+
     def with_payloads(self, payloads) -> "PimProgram":
         """Same command stream, different HOSTW payload data (the stream-
         group pattern: one recorded step, per-bank/per-step data). Shares

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .state import EVEN_MASK, ODD_MASK, SubarrayState
+from .state import EVEN_MASK, ODD_MASK, SubarrayState, make_subarray
 from .timing import (DDR3Timing, DEFAULT_TIMING, charge_aap, charge_burst,
                      charge_copy, charge_issue, charge_mra, charge_shift)
 
@@ -312,6 +312,19 @@ def run_program(state: SubarrayState, program,
         else:
             raise ValueError(op.op)
     return state, tuple(reads)
+
+
+def run_on_bits(program, bits=None, *, control: bool = True,
+                cfg: DDR3Timing = DEFAULT_TIMING):
+    """Run a recorded program eagerly on a fresh subarray initialized with
+    ``bits`` (``(num_rows, words)`` uint32, default all-zero). Returns
+    ``(state, reads)``. ``control=True`` seeds C0/C1 via
+    ``reserve_control_rows`` first — the convention ``sem.py`` witnesses
+    assume, so a DIFFERENT verdict replays with one call per program."""
+    state = make_subarray(program.num_rows, program.words, bits)
+    if control:
+        state = reserve_control_rows(state)
+    return run_program(state, program, cfg)
 
 
 def ambit_xor(state: SubarrayState, a, b, dst,

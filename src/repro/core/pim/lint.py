@@ -37,6 +37,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 import sys
 
 import numpy as np
@@ -48,7 +49,7 @@ from .device import (DeviceConfig, channel_occupancy, host_bus_ns,
 
 __all__ = [
     "CATALOG", "Diagnostic", "LintError", "LintReport", "lint_program",
-    "lint_schedule", "lint_trace", "main",
+    "lint_schedule", "lint_trace", "lint_trace_file", "main",
 ]
 
 ERROR = "error"
@@ -125,6 +126,34 @@ CATALOG: dict[str, tuple[str, str, str]] = {
                "every slot program must share the device's "
                "(num_rows, words) subarray shape; the vmapped runners "
                "cannot batch mismatched bitplanes"),
+    # PIM4xx: semantic diagnostics — findings of the symbolic abstract
+    # interpreter (sem.py), proved over packed truth tables rather than
+    # pattern-matched. Only emitted when the fact is PROVED (never from
+    # an approximation), so every PIM4xx is a true positive.
+    "PIM401": (WARNING, "op computes a constant",
+               "the op's result is provably the same constant row for "
+               "EVERY input (a TRA whose majority cancels its symbolic "
+               "operands, or a SHIFT chain that pushes the data entirely "
+               "past the subarray boundary): charged DRAM activations "
+               "for a value a FILL produces free"),
+    "PIM402": (WARNING, "MAJ with symbolically equal operands",
+               "two TRA operand rows provably hold the same boolean "
+               "function of the inputs, so MAJ degenerates to the "
+               "duplicated operand — the 5-op expansion is a copy"),
+    "PIM403": (WARNING, "cancelling NOT/SHIFT chain",
+               "back-to-back NOTs (or a SHIFT chain returning to net "
+               "displacement 0 with provably-zero edge lanes) reproduce "
+               "the original value exactly; the whole chain is dead "
+               "work"),
+    "PIM404": (WARNING, "semantically no-op write",
+               "the destination row provably already holds exactly the "
+               "value being written — the activation changes nothing "
+               "any program could observe"),
+    "PIM405": (ERROR, "pimverify equivalence directive failed",
+               "the trace carries a `# pimverify: equiv=<trace>` "
+               "contract and the prover found the two programs "
+               "DIFFERENT (a concrete distinguishing input exists) or "
+               "could not discharge the proof"),
 }
 
 # Cap per-code emissions so a degenerate stream (every op bad) cannot
@@ -532,8 +561,23 @@ def _assume_key(assume_initialized, num_rows: int):
     return frozenset(int(r) % num_rows for r in assume_initialized)
 
 
-def lint_program(program: ir.PimProgram, *,
-                 assume_initialized=None) -> LintReport:
+def _semantic_diags(program: ir.PimProgram) -> tuple[Diagnostic, ...]:
+    """The PIM401-404 tier: findings of the symbolic abstract interpreter
+    (``sem.semantic_findings``, content-digest-cached there). Best-effort
+    — a stream the interpreter cannot model yields no semantic findings;
+    the structural tier above owns malformed programs."""
+    from . import sem      # lazy: keep non-semantic lints numpy-light
+    try:
+        findings = sem.semantic_findings(program)
+    except Exception:
+        return ()
+    return tuple(Diagnostic(code=code, severity=CATALOG[code][0],
+                            message=msg, op_index=opi)
+                 for code, opi, msg in findings)
+
+
+def lint_program(program: ir.PimProgram, *, assume_initialized=None,
+                 semantic: bool = False) -> LintReport:
     """Statically verify one command stream. Pure columnar analysis: no
     execution, no tracing, cached per (digest, shape, payload shapes).
 
@@ -542,7 +586,13 @@ def lint_program(program: ir.PimProgram, *,
     ``make_device``/``reserve_control_rows`` outside the stream), a row
     iterable exempts those rows, and ``"all"`` disables the check (the
     right setting when device state persists from earlier steps, e.g.
-    inside a schedule plan)."""
+    inside a schedule plan).
+
+    ``semantic=True`` additionally runs the PIM4xx tier (``sem.py``):
+    proved constant results, degenerate MAJs, cancelling NOT/SHIFT
+    chains, no-op writes. Off by default — the verify gates and hot
+    schedule paths stay structural-only; ``lint_trace``/the CLI turn it
+    on."""
     assume = _assume_key(assume_initialized, program.num_rows)
     shapes = tuple(tuple(p.shape) for p in program.payloads)
     key = (program.digest, program.num_rows, program.words, shapes, assume)
@@ -557,6 +607,15 @@ def lint_program(program: ir.PimProgram, *,
         if len(_lint_cache) >= _LINT_CACHE_MAX:
             _lint_cache.pop(next(iter(_lint_cache)))
     _lint_cache[key] = diags
+    if semantic:
+        # Semantic findings ride sem.py's own payload-CONTENT-keyed cache
+        # (HOSTW bits are constants in the truth-table domain, so the
+        # shapes-keyed structural cache above must not hold them).
+        diags = tuple(sorted(
+            diags + _semantic_diags(program),
+            key=lambda d: (d.severity != ERROR,
+                           d.op_index if d.op_index is not None
+                           else 1 << 60, d.code)))
     lines = program.trace_lines
     if lines:
         diags = tuple(
@@ -674,12 +733,15 @@ def _plan_diagnostics(cfg: DeviceConfig, stripped, groups, deferred,
 
 
 def lint_schedule(cfg: DeviceConfig, programs, *,
-                  async_host: bool = False) -> LintReport:
+                  async_host: bool = False,
+                  semantic: bool = False) -> LintReport:
     """Statically verify a whole schedule layout against ``cfg``: the
     program-level pass per distinct stream plus the cross-slot COPY and
     async-host analyses. Accepts every layout ``schedule()`` accepts, and
     DIAGNOSES (rather than raises on) shape mismatches and out-of-device
-    COPY destinations."""
+    COPY destinations. ``semantic=True`` adds the PIM4xx tier per
+    distinct stream (distinct by payload CONTENT, not just shape — HOSTW
+    bits are constants in the semantic domain)."""
     from .schedule import _normalize_programs    # lazy: avoid cycle
     emit: list[Diagnostic] = []
     try:
@@ -701,10 +763,13 @@ def lint_schedule(cfg: DeviceConfig, programs, *,
                         f"device shape {(cfg.num_rows, cfg.words)}"))
             continue
         key = (prog.digest, tuple(tuple(p.shape) for p in prog.payloads))
+        if semantic:
+            key = key + (prog.payload_digest,)
         if key not in seen:
             seen.add(key)
             emit.extend(dataclasses.replace(d, slot=coords)
-                        for d in lint_program(prog).diagnostics)
+                        for d in lint_program(
+                            prog, semantic=semantic).diagnostics)
         # Resolve cross-slot copies, diagnosing bad coordinates (PIM301)
         # where the scheduler's _split_copies would raise.
         for i, op in enumerate(prog.ops):
@@ -737,11 +802,14 @@ def lint_schedule(cfg: DeviceConfig, programs, *,
 
 def lint_trace(text: str, *, banks: int | None = None,
                subarrays: int | None = None,
-               async_host: bool = False) -> LintReport:
+               async_host: bool = False,
+               semantic: bool = True) -> LintReport:
     """Lint a pim-trace v1/v2/v3 text. The device defaults to the trace
     header's geometry on one channel/rank; ``banks``/``subarrays``
     override it, so a trace can be checked against a SMALLER device than
-    it was captured on (out-of-device COPY destinations become PIM301)."""
+    it was captured on (out-of-device COPY destinations become PIM301).
+    The PIM4xx semantic tier is ON by default for traces (files are the
+    audit path; pass ``semantic=False`` to stay structural-only)."""
     progs = ir.from_trace_device(text)
     hdr_banks, hdr_subs = len(progs), len(progs[0])
     shapes = {(p.num_rows, p.words) for bank in progs for p in bank}
@@ -749,7 +817,7 @@ def lint_trace(text: str, *, banks: int | None = None,
     cfg = DeviceConfig(channels=1, ranks=1, banks_per_rank=hdr_banks,
                        subarrays=hdr_subs, num_rows=rows, words=words)
     report = lint_schedule(cfg, [list(bank) for bank in progs],
-                           async_host=async_host)
+                           async_host=async_host, semantic=semantic)
     diags = list(report.diagnostics)
     want_b = hdr_banks if banks is None else int(banks)
     want_s = hdr_subs if subarrays is None else int(subarrays)
@@ -780,16 +848,89 @@ def lint_trace(text: str, *, banks: int | None = None,
 # ---------------------------------------------------------------------------
 
 def _trace_directives(text: str) -> dict:
-    """Parse ``# pimlint: key=value ...`` comment directives (fixture
-    self-description: expected code, device overrides)."""
+    """Parse ``# pimlint: key=value ...`` and ``# pimverify: key=value``
+    comment directives (fixture self-description: expected code, device
+    overrides, reference trace for equivalence proof)."""
     out: dict = {}
     for line in text.splitlines():
         line = line.strip()
-        if line.startswith("#") and "pimlint:" in line:
-            for tok in line.split("pimlint:", 1)[1].split():
-                k, _, v = tok.partition("=")
-                out[k] = v
+        if not line.startswith("#"):
+            continue
+        for marker in ("pimlint:", "pimverify:"):
+            if marker in line:
+                for tok in line.split(marker, 1)[1].split():
+                    k, _, v = tok.partition("=")
+                    out[k] = v
     return out
+
+
+def _pimverify_diags(path: str, text: str, ref: str) -> list[Diagnostic]:
+    """PIM405: prove this trace equivalent to the reference trace named
+    by its ``# pimverify: equiv=<file>`` directive (resolved relative to
+    the trace's own directory). DIFFERENT is an ERROR carrying the
+    distinguishing component + witness lane; UNKNOWN degrades to a
+    WARNING (the proof did not go through — not a proved bug)."""
+    from . import sem
+    ref_path = os.path.join(os.path.dirname(os.path.abspath(path)), ref)
+    try:
+        with open(ref_path) as f:
+            ref_text = f.read()
+        progs = ir.from_trace_device(text)
+        ref_progs = ir.from_trace_device(ref_text)
+        flat = [p for bank in progs for p in bank]
+        ref_flat = [p for bank in ref_progs for p in bank]
+        if len(flat) != 1 or len(ref_flat) != 1:
+            raise ValueError("pimverify: equiv= requires single-slot "
+                             "traces on both sides")
+        report = sem.prove_equivalent(flat[0], ref_flat[0])
+    except (OSError, ValueError) as e:
+        return [Diagnostic(code="PIM405", severity=ERROR,
+                           message=f"pimverify equiv={ref}: {e}")]
+    if report.verdict == sem.EQUIVALENT:
+        return []
+    if report.verdict == sem.DIFFERENT:
+        w = report.witness
+        where = (f" (component {report.component}, lane {w.lane})"
+                 if w is not None else "")
+        return [Diagnostic(code="PIM405", severity=ERROR,
+                           message=f"trace is NOT equivalent to {ref}"
+                                   f"{where}")]
+    return [Diagnostic(code="PIM405", severity=WARNING,
+                       message=f"equivalence to {ref} could not be "
+                               f"proved (unknown: "
+                               f"{', '.join(report.unknown) or '?'})")]
+
+
+def lint_trace_file(path: str, *, banks: int | None = None,
+                    subarrays: int | None = None,
+                    async_host: bool = False,
+                    semantic: bool = True) -> LintReport:
+    """Lint a pim-trace FILE: ``lint_trace`` plus the file-scoped extras
+    — in-file ``# pimlint: banks=/subarrays=`` device overrides (explicit
+    arguments win), parse failures wrapped as a PARSE diagnostic, and the
+    ``# pimverify: equiv=<file>`` equivalence proof (PIM405), whose
+    relative reference resolves against the trace's directory."""
+    with open(path) as f:
+        text = f.read()
+    directives = _trace_directives(text)
+    if banks is None and "banks" in directives:
+        banks = int(directives["banks"])
+    if subarrays is None and "subarrays" in directives:
+        subarrays = int(directives["subarrays"])
+    try:
+        report = lint_trace(text, banks=banks, subarrays=subarrays,
+                            async_host=async_host, semantic=semantic)
+    except ValueError as e:
+        return LintReport((Diagnostic(code="PARSE", severity=ERROR,
+                                      message=str(e)),))
+    diags = report.diagnostics
+    if semantic and "equiv" in directives:
+        diags = tuple(sorted(
+            diags + tuple(_pimverify_diags(path, text, directives["equiv"])),
+            key=lambda d: (d.severity != ERROR,
+                           d.op_index if d.op_index is not None
+                           else 1 << 60, d.code)))
+    return LintReport(diags)
 
 
 def _lint_one_file(path: str, args) -> tuple[str, LintReport, str | None]:
@@ -797,18 +938,11 @@ def _lint_one_file(path: str, args) -> tuple[str, LintReport, str | None]:
     single PARSE error diagnostic so the CLI never tracebacks on input."""
     with open(path) as f:
         text = f.read()
-    directives = _trace_directives(text)
-    banks = args.banks if args.banks is not None else (
-        int(directives["banks"]) if "banks" in directives else None)
-    subarrays = args.subarrays if args.subarrays is not None else (
-        int(directives["subarrays"]) if "subarrays" in directives else None)
-    expect = args.expect or directives.get("expect")
-    try:
-        report = lint_trace(text, banks=banks, subarrays=subarrays,
-                            async_host=args.async_host)
-    except ValueError as e:
-        report = LintReport((Diagnostic(code="PARSE", severity=ERROR,
-                                        message=str(e)),))
+    expect = args.expect or _trace_directives(text).get("expect")
+    report = lint_trace_file(path, banks=args.banks,
+                             subarrays=args.subarrays,
+                             async_host=args.async_host,
+                             semantic=not args.no_semantic)
     return path, report, expect
 
 
@@ -834,6 +968,9 @@ def main(argv=None) -> int:
                          "the diagnostics (overrides in-file directives)")
     ap.add_argument("--async-host", action="store_true",
                     help="also run the async-host hiding analysis")
+    ap.add_argument("--no-semantic", action="store_true",
+                    help="skip the PIM4xx semantic tier and the "
+                         "pimverify/workload equivalence proofs")
     ap.add_argument("--workloads", action="store_true",
                     help="lint the repo's canonical in-memory workloads "
                          "(shift pipeline, XOR reduce, sharded layouts) "
@@ -849,6 +986,9 @@ def main(argv=None) -> int:
     if args.workloads:
         for name, report in _workload_reports():
             results.append((name, report, None))
+        if not args.no_semantic:
+            for name, report in _semantic_reports():
+                results.append((name, report, None))
     for path in args.traces:
         try:
             results.append(_lint_one_file(path, args))
@@ -905,6 +1045,82 @@ def _workload_reports():
     out.append(("workload:gather_rows+shard[2x2]",
                 lint_schedule(cfg2, fused)))
     return out
+
+
+def _recorded_xtime() -> ir.PimProgram:
+    """Record (never execute) one GF(2^8) xtime over a symbolic input
+    register — the deepest real kernel in the repo at 16 symbolic inputs,
+    right at the analyzer's default budget."""
+    from ..bitplane import gf
+    from ..bitplane.vm import PimVM
+    vm = PimVM(8, num_rows=64, words=1)
+    a = vm.alloc()
+    gf.xtime(vm, a)
+    return vm.take_recorded()
+
+
+def _recorded_rs_encode() -> ir.PimProgram:
+    """Record an RS(n, n-2) encode of a concrete 3-symbol message (4 byte
+    lanes at words=1); loads are constants in the semantic domain, so the
+    whole LFSR folds and the fusion proof is exercised end to end."""
+    from ..bitplane import rs
+    from ..bitplane.vm import PimVM
+    vm = PimVM(8, num_rows=128, words=1)
+    msg = [vm.load([i + 1, 2 * i + 3, 7 * i + 5, i * i + 1])
+           for i in range(3)]
+    rs.rs_encode(vm, msg, 2)
+    return vm.take_recorded()
+
+
+def _semantic_reports():
+    """The proof leg of ``--workloads``: every canonical kernel must pass
+    its own fused-vs-unfused equivalence gate, and the flagship streams
+    must summarize to the closed forms the paper promises. Failures show
+    up as ``SEM`` error diagnostics so they fold into the same report/
+    exit-code machinery as the lint checks."""
+    from . import sem
+    from .program import ambit_xor_program, shift_workload_program
+    from .schedule import xor_reduce_program
+
+    def check(name, fn):
+        try:
+            msg = fn()
+        except Exception as e:          # a crash IS a failed proof here
+            msg = f"{type(e).__name__}: {e}"
+        diags = () if msg is None else (
+            Diagnostic(code="SEM", severity=ERROR, message=str(msg)),)
+        return (f"sem:{name}", LintReport(diags))
+
+    def xor_proved():
+        prog = ambit_xor_program()
+        got = sem.summarize(prog).get(2)
+        if got != "r0 ^ r1":
+            return f"ambit_xor row 2 summarizes to {got!r}, not 'r0 ^ r1'"
+        rep = sem.fusion_report(prog)
+        if rep.verdict != sem.EQUIVALENT:
+            return f"ambit_xor fusion verdict {rep.verdict}"
+        return None
+
+    def fusion_of(prog):
+        def fn():
+            rep = sem.fusion_report(prog)
+            if rep.verdict != sem.EQUIVALENT:
+                return f"fusion verdict {rep.verdict}" + (
+                    f" (unknown: {', '.join(rep.unknown)})"
+                    if rep.unknown else "")
+            return None
+        return fn
+
+    return [
+        check("ambit_xor", xor_proved),
+        check("shift_workload(256)",
+              fusion_of(shift_workload_program(256, num_rows=64,
+                                               words=32))),
+        check("xor_reduce",
+              fusion_of(xor_reduce_program(32, 8, rows=[0, 1, 2], dst=3))),
+        check("gf.xtime", fusion_of(_recorded_xtime())),
+        check("rs.encode", fusion_of(_recorded_rs_encode())),
+    ]
 
 
 if __name__ == "__main__":

@@ -79,6 +79,24 @@ def shift_workload_program(n_shifts: int, num_rows: int = 512,
 
 
 @functools.lru_cache(maxsize=256)
+def ambit_xor_program(num_rows: int = 16, words: int = 2, *, a: int = 0,
+                      b: int = 1, dst: int = 2,
+                      read_back: bool = True) -> PimProgram:
+    """The canonical recorded ``ambit_xor`` kernel: reserve control rows,
+    expand ``dst <- a ^ b`` into its MAJ/NOT primitive sequence, and
+    (optionally) read ``dst`` back. The small default shape keeps the
+    stream cheap to execute AND to analyze — ``sem.summarize`` proves
+    row ``dst`` computes ``r{a} ^ r{b}`` on it, the repo's one-line
+    "proved by analysis" demo."""
+    builder = ProgramBuilder(num_rows, words)
+    builder.reserve_control_rows()
+    builder.ambit_xor(a, b, dst)
+    if read_back:
+        builder.read_row(dst)
+    return builder.build()
+
+
+@functools.lru_cache(maxsize=256)
 def _shift_workload_compiled(n_shifts: int, num_rows: int,
                              words: int) -> CompiledProgram:
     return compile_program(shift_workload_program(n_shifts, num_rows, words))

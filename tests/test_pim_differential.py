@@ -40,7 +40,7 @@ except ImportError:  # offline fallback: deterministic seed sweep below
 
 from repro.core import pim
 from repro.core.pim import exec as pim_exec
-from repro.core.pim import ir
+from repro.core.pim import ir, isa, sem
 
 ROWS = 16
 WORDS = 4
@@ -147,6 +147,72 @@ def _assert_agree(prog, refresh=False):
                 float(getattr(state.meter, f)),
                 float(getattr(s_e.meter, f)), rtol=1e-6,
                 err_msg=f"{name}: meter.{f}")
+
+
+def _mutate(prog, rng):
+    """A nearby program: identical rebuild, fresh payload contents, or one
+    appended op — so the static-semantics leg exercises EQUIVALENT and
+    DIFFERENT verdicts (and the occasional appended no-op)."""
+    c = rng.random()
+    if c < 0.25 and prog.payloads:
+        return prog.with_payloads(
+            rng.integers(0, 2**32, (len(prog.payloads), WORDS),
+                         dtype=np.uint32))
+    if c < 0.5:
+        return ir.PimProgram(ops=prog.ops, num_rows=ROWS, words=WORDS,
+                             payloads=prog.payloads)
+    r1, r2 = (int(x) for x in rng.choice(USER_ROWS, 2, replace=False))
+    k = int(rng.integers(0, 4))
+    if k == 0:
+        op = ir.PimOp(ir.OP_ROWCLONE, a=r1, b=r2)
+    elif k == 1:
+        op = ir.PimOp(ir.OP_SHIFT, a=r1, b=r2,
+                      delta=int(rng.choice([-1, 1])))
+    elif k == 2:
+        op = ir.PimOp(ir.OP_FILL, b=r1,
+                      payload=int(rng.integers(0, 2**32)))
+    else:
+        op = ir.PimOp(ir.OP_READ, a=r1)
+    return ir.PimProgram(ops=prog.ops + (op,), num_rows=ROWS,
+                         words=WORDS, payloads=prog.payloads)
+
+
+def _assert_sem_agrees(seed: int, n_ops: int):
+    """Static-semantics leg: the symbolic analyzer's verdicts must agree
+    with bit-exact execution.
+
+      * fusion is semantics-preserving by construction, so the static
+        fused-vs-unfused proof may abstain (UNKNOWN past the symbolic
+        budget) but must NEVER return DIFFERENT;
+      * ``prove_equivalent(prog, prog)`` likewise never DIFFERENT;
+      * on a mutated pair: EQUIVALENT implies executed full states and
+        reads match on random inputs, and DIFFERENT implies the shipped
+        witness actually distinguishes the programs when replayed —
+        i.e. zero false EQUIVALENTs and no vacuous witnesses.
+    """
+    rng = np.random.default_rng(seed)
+    prog = _build_program(rng, n_ops)
+
+    assert sem.fusion_report(prog).verdict != sem.DIFFERENT, seed
+    assert sem.prove_equivalent(prog, prog).verdict != sem.DIFFERENT, seed
+
+    mut = _mutate(prog, rng)
+    rep = sem.prove_equivalent(prog, mut)
+    if rep.verdict == sem.DIFFERENT:
+        assert rep.witness is not None, seed
+        assert sem.check_witness(prog, mut, rep.witness), \
+            (seed, rep.component)
+    elif rep.verdict == sem.EQUIVALENT:
+        for _ in range(2):
+            bits = rng.integers(0, 2**32, (ROWS, WORDS), dtype=np.uint32)
+            sa, ra = isa.run_on_bits(prog, bits)
+            sb, rb = isa.run_on_bits(mut, bits)
+            for f in ("bits", "mig_top", "mig_bot", "dcc"):
+                assert np.array_equal(np.asarray(getattr(sa, f)),
+                                      np.asarray(getattr(sb, f))), (seed, f)
+            assert len(ra) == len(rb), seed
+            for x, y in zip(ra, rb):
+                assert np.array_equal(np.asarray(x), np.asarray(y)), seed
 
 
 def _assert_channel_and_async_invariants(seed: int, n_steps: int,
@@ -470,6 +536,10 @@ if HAVE_HYPOTHESIS:
         _assert_agree(_build_program(np.random.default_rng(seed), n_ops),
                       refresh=refresh)
 
+    @given(seed=st.integers(0, 2**32 - 1), n_ops=st.integers(1, 24))
+    def test_differential_static_semantics(seed, n_ops):
+        _assert_sem_agrees(seed, n_ops)
+
     @given(seed=st.integers(0, 2**32 - 1), n_steps=st.integers(1, 3))
     def test_differential_channel_async_invariants(seed, n_steps):
         _assert_channel_and_async_invariants(seed, n_steps)
@@ -507,6 +577,10 @@ else:
         rng = np.random.default_rng(1000 + seed)
         _assert_agree(_build_program(rng, int(rng.integers(1, 25))),
                       refresh=bool(seed % 2))
+
+    @pytest.mark.parametrize("seed", range(30))
+    def test_differential_static_semantics(seed):
+        _assert_sem_agrees(seed, 1 + seed % 24)
 
     @pytest.mark.parametrize("seed", range(8))
     def test_differential_channel_async_invariants(seed):

@@ -56,16 +56,19 @@ def _raw(ops, rows=ROWS, words=WORDS, payloads=()):
 # ---------------------------------------------------------------------------
 
 FIXTURES = sorted(glob.glob(os.path.join(FIXDIR, "*.trace")))
-# fixture name -> op index the diagnostic must anchor to (trace op order)
+# fixture name -> op index the diagnostic must anchor to (trace op order);
+# None = a whole-trace diagnostic (the pim405 equivalence proof has no op)
 EXPECT_OP = {"pim103": 0, "pim104": 5, "pim106": 1, "pim201": 0,
              "pim202": 0, "pim203": 1, "pim204": 1, "pim301": 1,
-             "pim302": 3, "pim303": 0}
+             "pim302": 3, "pim303": 0, "pim401": 4, "pim402": 3,
+             "pim403": 3, "pim404": 1, "pim405": None}
 
 
 def test_fixture_dir_is_populated():
     names = {os.path.basename(p) for p in FIXTURES}
     assert {f"pim{c}.trace" for c in
-            (103, 104, 106, 201, 202, 203, 204, 301, 302, 303)} <= names
+            (103, 104, 106, 201, 202, 203, 204, 301, 302, 303,
+             401, 402, 403, 404, 405)} <= names
     assert "clean_maj.trace" in names
 
 
@@ -75,8 +78,9 @@ def test_fixture_flags_expected_code_at_expected_op(path):
     with open(path) as f:
         text = f.read()
     directives = lint._trace_directives(text)
-    banks = int(directives["banks"]) if "banks" in directives else None
-    report = lint.lint_trace(text, banks=banks)
+    # lint via the file entry point: it self-applies device directives and
+    # resolves pimverify references relative to the fixture directory
+    report = lint.lint_trace_file(path)
     name = os.path.basename(path).removesuffix(".trace")
     if "expect" not in directives:
         assert report.diagnostics == (), report.render()
@@ -100,6 +104,38 @@ def test_fixture_diagnostics_carry_trace_line_provenance():
     # the flagged op (op 5) sits on the trace's 11th physical line
     assert hit.trace_line == 11
     assert f"line {hit.trace_line}" in hit.render()
+
+
+def test_pimverify_directive_parsing_and_missing_ref(tmp_path):
+    text = ("# pim-trace v2 rows=16 words=2 banks=1\n"
+            "# pimlint: expect=PIM405\n"
+            "# pimverify: equiv=nowhere.trace\n"
+            "BANK 0 HOSTR 2\n")
+    assert lint._trace_directives(text) == {"expect": "PIM405",
+                                            "equiv": "nowhere.trace"}
+    # an unreadable reference is an ERROR diagnostic, not a traceback
+    t = tmp_path / "t.trace"
+    t.write_text(text)
+    report = lint.lint_trace_file(str(t))
+    hit = next(d for d in report.diagnostics if d.code == "PIM405")
+    assert hit.severity == lint.ERROR and "nowhere.trace" in hit.message
+
+
+def test_pim405_witness_names_the_difference():
+    report = lint.lint_trace_file(os.path.join(FIXDIR, "pim405.trace"))
+    hit = next(d for d in report.diagnostics if d.code == "PIM405")
+    assert hit.severity == lint.ERROR
+    assert "NOT equivalent" in hit.message and "lane" in hit.message
+
+
+def test_no_semantic_suppresses_pim4xx(capsys):
+    path = os.path.join(FIXDIR, "pim404.trace")
+    assert "PIM404" not in lint.lint_trace_file(path,
+                                                semantic=False).codes()
+    # CLI parity: without the semantic tier the expect directive misses
+    assert lint.main([path, "--no-semantic"]) == 1
+    assert lint.main([path]) == 0
+    capsys.readouterr()
 
 
 # ---------------------------------------------------------------------------
@@ -405,6 +441,13 @@ def test_benchmark_workloads_lint_clean():
         assert report.ok, (name, report.render())
 
 
+def test_workload_semantic_proof_legs_all_pass():
+    # the --workloads proof tier: fused == unfused for every canonical
+    # kernel, and ambit_xor summarizes to its closed form
+    for name, report in lint._semantic_reports():
+        assert report.diagnostics == (), (name, report.render())
+
+
 # ---------------------------------------------------------------------------
 # Performance: vectorized O(n_ops), fast enough for CI gating
 # ---------------------------------------------------------------------------
@@ -465,8 +508,13 @@ def test_cli_exit_codes(tmp_path, capsys):
     capsys.readouterr()
 
 
-def test_cli_workloads_leg(capsys):
-    assert lint.main(["--workloads"]) == 0
+def test_cli_workloads_leg(tmp_path, capsys):
+    out = tmp_path / "wl.json"
+    assert lint.main(["--workloads", "--json", str(out)]) == 0
+    payload = json.loads(out.read_text())
+    assert {"sem:ambit_xor", "sem:shift_workload(256)", "sem:xor_reduce",
+            "sem:gf.xtime", "sem:rs.encode"} <= set(payload)
+    assert lint.main(["--workloads", "--no-semantic"]) == 0
     capsys.readouterr()
 
 
